@@ -1,0 +1,56 @@
+"""Ablation (beyond-paper): Theorem IV.1 predicts the decoding error
+improves with the spectral expansion lambda at fixed replication d.
+Compare vertex-transitive graphs of equal d and n but different lambda:
+hypercube (lambda = 2) vs best-of random circulants vs random regular,
+plus the d=2 cycle as the degenerate case."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (cycle_graph, graph_assignment, hypercube_graph,
+                        monte_carlo_error, random_regular_graph)
+from repro.core.graphs import lps_like_cayley_expander
+
+
+def run(p: float = 0.3, trials: int = 300) -> List[Dict]:
+    cases = [
+        ("cycle_n64_d2", cycle_graph(64)),
+        ("hypercube_d4", hypercube_graph(4)),              # n=16, lam=2
+        ("circulant_n16_d4", lps_like_cayley_expander(16, 4, seed=0)),
+        ("random_regular_n16_d4", random_regular_graph(16, 4, seed=0)),
+        ("random_regular_n64_d4", random_regular_graph(64, 4, seed=0)),
+        ("random_regular_n64_d6", random_regular_graph(64, 6, seed=0)),
+    ]
+    rows = []
+    for name, g in cases:
+        A = graph_assignment(g, name=name)
+        mc = monte_carlo_error(A, p, trials=trials, method="optimal")
+        rows.append({"graph": name, "n": g.n, "d": g.replication_factor,
+                     "lambda": g.spectral_expansion(), "p": p,
+                     "error": mc["mean_error"]})
+    return rows
+
+
+def main(fast: bool = False):
+    t0 = time.time()
+    rows = run(trials=100 if fast else 300)
+    for r in rows:
+        print(",".join(f"{k}={v:.4g}" if isinstance(v, float) else
+                       f"{k}={v}" for k, v in r.items()))
+    by = {r["graph"]: r for r in rows}
+    # d=2 cycle is far worse than any d=4 graph ...
+    assert by["cycle_n64_d2"]["error"] > \
+        2 * by["random_regular_n64_d4"]["error"]
+    # ... and d=6 beats d=4 at the same n (exponential-in-d decay)
+    assert by["random_regular_n64_d6"]["error"] <= \
+        by["random_regular_n64_d4"]["error"] + 1e-3
+    print(f"# expansion_ablation done in {time.time() - t0:.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

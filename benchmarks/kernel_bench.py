@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: wall time of the pure-jnp reference path on
+CPU (the Pallas kernels are TPU-targeted; interpret-mode timing is a
+Python emulation and not meaningful, so it is validated for
+correctness in tests and only counted here), plus derived bandwidth.
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.coded_combine import ref as cc_ref
+from repro.kernels.decode_attention import ref as da_ref
+from repro.kernels.rmsnorm import ref as rn_ref
+
+
+def _time(fn, *args, reps=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main(fast: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    rows_n = 2048 if fast else 8192
+    x = jnp.asarray(rng.normal(size=(rows_n, 1024)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=1024), jnp.float32)
+    f = jax.jit(rn_ref.rmsnorm)
+    us = _time(f, x, s)
+    gb = 2 * x.size * 4 / 1e9
+    rows.append(("rmsnorm_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+
+    B, H, KVH, S, Dh = 4, 16, 4, (2048 if fast else 8192), 128
+    q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KVH, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KVH, Dh)), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    f = jax.jit(da_ref.decode_attention)
+    us = _time(f, q, k, v, lengths)
+    gb = 2 * k.size * 4 / 1e9
+    rows.append(("decode_attention_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+
+    nb, D = 16, (1 << 20 if fast else 1 << 22)
+    g = jnp.asarray(rng.normal(size=(nb, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=nb), jnp.float32)
+    f = jax.jit(cc_ref.coded_combine)
+    us = _time(f, g, w)
+    gb = g.size * 4 / 1e9
+    rows.append(("coded_combine_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

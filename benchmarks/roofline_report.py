@@ -1,0 +1,69 @@
+"""Assemble the #Roofline table from the dry-run JSON artifacts
+(experiments/dryrun/*.json): per (arch x shape x mesh), the three
+roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a
+one-line what-would-move-it-down note."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+NOTES = {
+    "collective": ("shrink activation reshards: bf16 collectives, "
+                   "seq-dim sharding, fewer per-microbatch psums"),
+    "memory": ("raise arithmetic intensity: bf16 dots, larger fused "
+               "blocks, keep attention tiles VMEM-resident"),
+    "compute": ("reduce redundant FLOPs: causal block skip, lower "
+                "remat, smaller replication d"),
+}
+
+
+def load(dirpath: str = "experiments/dryrun") -> List[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: List[dict]) -> str:
+    out = ["| arch | shape | mesh | Tc(ms) | Tm(ms) | Tx(ms) | "
+           "bottleneck | useful | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | - | - "
+                       f"| - | skipped | - | {r['reason']} |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | - | - "
+                       f"| - | ERROR | - | {r.get('error', '')[:60]} |")
+            continue
+        rl = r["roofline"]
+        dom = rl["dominant"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {rl['t_compute_s'] * 1e3:.1f} "
+            f"| {rl['t_memory_s'] * 1e3:.1f} "
+            f"| {rl['t_collective_s'] * 1e3:.1f} "
+            f"| {dom} | {rl['useful_flops_ratio']:.2f} "
+            f"| {NOTES[dom]} |")
+    return "\n".join(out)
+
+
+def main(fast: bool = False):
+    rows = load()
+    if not rows:
+        print("# no dry-run artifacts found (run repro.launch.dryrun)")
+        return []
+    print(table(rows))
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    print(f"# roofline_report: {n_ok} ok / {len(rows)} rows")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

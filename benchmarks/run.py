@@ -1,0 +1,46 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``python -m benchmarks.run [--full]`` -- fast mode by default so the
+whole suite stays in CPU-minutes; --full uses the paper-scale settings
+(m=6552 LPS regime etc.).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: decoding_error,convergence,"
+                         "adversarial,bounds,kernels,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (adversarial, bounds, convergence,
+                            decoding_error, expansion_ablation,
+                            kernel_bench, roofline_report)
+    suite = {
+        "decoding_error": decoding_error.main,   # Fig 3
+        "convergence": convergence.main,         # Fig 4/5
+        "adversarial": adversarial.main,         # Table I / Cor V.2
+        "bounds": bounds.main,                   # Props A.1/A.3
+        "expansion": expansion_ablation.main,    # Thm IV.1 lambda ablation
+        "kernels": kernel_bench.main,            # TPU-adaptation layer
+        "roofline": roofline_report.main,        # Dry-run #Roofline
+    }
+    wanted = args.only.split(",") if args.only else list(suite)
+    t0 = time.time()
+    for name in wanted:
+        print(f"\n=== {name} ===")
+        sys.stdout.flush()
+        suite[name](fast=fast)
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + autoregressive decode with the
+per-architecture cache (KV cache / SSM state / xLSTM state). Wraps
+repro.launch.serve.
+
+    PYTHONPATH=src python examples/serve_llm.py [--arch ...]
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:] or [
+        "--arch", "xlstm-1.3b", "--batch", "4", "--prompt-len", "16",
+        "--new-tokens", "12", "--max-len", "64",
+    ]
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end driver: coded training of a (reduced) assigned
+architecture on the virtual-device mesh, with live straggler sampling
+and O(m) optimal decoding each step. Wraps repro.launch.train.
+
+    PYTHONPATH=src python examples/train_lm_coded.py [--arch ...]
+"""
+
+import sys
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:] or [
+        "--arch", "deepseek-moe-16b", "--steps", "40",
+        "--seq-len", "48", "--block-size", "2", "--lr", "1e-3",
+        "--straggler-p", "0.2", "--scheme", "expander",
+        "--decoding", "optimal", "--replication", "2",
+    ]
+    train.main(argv)
+
+
+if __name__ == "__main__":
+    main()

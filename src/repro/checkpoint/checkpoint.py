@@ -1,0 +1,72 @@
+"""Minimal dependency-free checkpointing: pytree <-> .npz with a JSON
+treedef sidecar. Atomic writes (tmp + rename), step-numbered directory
+layout, latest-step discovery."""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Tuple[list, list]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [np.asarray(v) for _, v in flat]
+    return keys, vals
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> str:
+    """Save pytree to ``path`` (directory). Returns the file written."""
+    os.makedirs(path, exist_ok=True)
+    name = f"ckpt_{step:08d}" if step is not None else "ckpt"
+    keys, vals = _flatten_with_paths(tree)
+    # np.savez appends ".npz" unless the name already ends with it, so
+    # the temp file must carry the suffix or the rename moves an empty
+    # file.
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **{f"a{i}": v for i, v in enumerate(vals)})
+        os.replace(tmp, os.path.join(path, name + ".npz"))
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    meta = {"keys": keys, "step": step}
+    with open(os.path.join(path, name + ".json"), "w") as f:
+        json.dump(meta, f)
+    return os.path.join(path, name + ".npz")
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for f in os.listdir(path):
+        if f.startswith("ckpt_") and f.endswith(".npz"):
+            steps.append(int(f[5:13]))
+    return max(steps) if steps else None
+
+
+def restore(path: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``like`` (shapes validated)."""
+    if step is None:
+        step = latest_step(path)
+    name = f"ckpt_{step:08d}" if step is not None else "ckpt"
+    data = np.load(os.path.join(path, name + ".npz"))
+    with open(os.path.join(path, name + ".json")) as f:
+        meta = json.load(f)
+    vals = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat_like) != len(vals):
+        raise ValueError(f"checkpoint has {len(vals)} leaves, "
+                         f"expected {len(flat_like)}")
+    for a, b in zip(flat_like, vals):
+        if tuple(a.shape) != tuple(b.shape):
+            raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    return jax.tree_util.tree_unflatten(treedef, vals)

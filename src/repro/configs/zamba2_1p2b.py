@@ -1,0 +1,21 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64; Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    arch_type="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    attn_positions=(13, 26),  # two shared-attn insertions
+    source="arXiv:2411.15242",
+)

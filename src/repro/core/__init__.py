@@ -1,0 +1,47 @@
+"""Gradient coding with optimal decoding (Glasgow & Wootters 2020).
+
+Public surface of the paper's core contribution:
+
+- graphs:      expander constructions (incl. the exact LPS X^{5,13})
+- assignment:  graph / FRC / adjacency / Bernoulli / uncoded schemes
+- decoding:    O(m) optimal graph decoder, pseudoinverse, fixed
+- stragglers:  Bernoulli / fixed-count / Markov / adversarial attacks
+- theory:      the paper's closed-form bounds
+- debias:      Prop B.1 black-box debiasing
+- coded_gd:    Algorithms 2 & 3 (single-host logical view)
+"""
+
+from .graphs import (Graph, cycle_graph, complete_graph, hypercube_graph,
+                     paley_graph, circulant_graph, random_regular_graph,
+                     lps_graph, make_expander)
+from .assignment import (Assignment, graph_assignment, expander_assignment,
+                         frc_assignment, adjacency_assignment,
+                         bernoulli_assignment, uncoded_assignment)
+from .decoding import (DecodeResult, decode, optimal_alpha_graph,
+                       optimal_decode_graph, optimal_decode_pinv,
+                       optimal_decode_frc, fixed_decode, normalized_error,
+                       monte_carlo_error, debias_alpha)
+from .stragglers import (StragglerModel, BernoulliStragglers,
+                         FixedCountStragglers, MarkovStragglers,
+                         adversarial_mask, adversarial_mask_graph,
+                         adversarial_mask_frc)
+from . import theory
+from .debias import debias_assignment, estimate_mean_alpha
+from .coded_gd import LeastSquares, GDTrace, gcod, sgd_alg, uncoded_gd
+
+__all__ = [
+    "Graph", "cycle_graph", "complete_graph", "hypercube_graph",
+    "paley_graph", "circulant_graph", "random_regular_graph", "lps_graph",
+    "make_expander",
+    "Assignment", "graph_assignment", "expander_assignment",
+    "frc_assignment", "adjacency_assignment", "bernoulli_assignment",
+    "uncoded_assignment",
+    "DecodeResult", "decode", "optimal_alpha_graph", "optimal_decode_graph",
+    "optimal_decode_pinv", "optimal_decode_frc", "fixed_decode",
+    "normalized_error", "monte_carlo_error", "debias_alpha",
+    "StragglerModel", "BernoulliStragglers", "FixedCountStragglers",
+    "MarkovStragglers", "adversarial_mask", "adversarial_mask_graph",
+    "adversarial_mask_frc",
+    "theory", "debias_assignment", "estimate_mean_alpha",
+    "LeastSquares", "GDTrace", "gcod", "sgd_alg", "uncoded_gd",
+]

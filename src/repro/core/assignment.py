@@ -1,0 +1,115 @@
+"""Assignment matrices: data blocks -> machines.
+
+The paper's scheme (Def II.2) derives A from a graph; we also implement
+every baseline the paper compares against (Table I / Section VIII):
+
+- ``GraphAssignment``   : blocks = vertices, machines = edges (ours).
+- ``FRCAssignment``     : fractional repetition code of [4]/[10].
+- ``AdjacencyAssignment``: expander code of [6] (A = adjacency matrix,
+  machines = vertices holding their d neighbours' blocks).
+- ``BernoulliAssignment``: rBGC-style random sparse assignment of [8].
+- ``UncodedAssignment`` : identity (ignore-stragglers baseline).
+
+All assignments are over *blocks* (the N x m point-level matrix is the
+block-level matrix with each row repeated block_size times, which leaves
+every normalized error metric unchanged -- see paper Section II).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .graphs import Graph, make_expander
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """A block-level assignment matrix with scheme metadata."""
+
+    A: np.ndarray  # (n_blocks, m_machines)
+    name: str
+    graph: Optional[Graph] = None
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def replication_factor(self) -> float:
+        return float(np.count_nonzero(self.A)) / self.n
+
+    @property
+    def load(self) -> int:
+        """Computational load: max blocks per machine."""
+        return int(np.count_nonzero(self.A, axis=0).max())
+
+    def blocks_of_machine(self, j: int) -> np.ndarray:
+        return np.nonzero(self.A[:, j])[0]
+
+    def machines_of_block(self, i: int) -> np.ndarray:
+        return np.nonzero(self.A[i, :])[0]
+
+
+def graph_assignment(graph: Graph, name: str = "graph") -> Assignment:
+    """Definition II.2: A_ij = 1 iff edge j has vertex i as an endpoint."""
+    A = np.zeros((graph.n, graph.m), dtype=np.float64)
+    for j, (u, v) in enumerate(graph.edges):
+        A[u, j] = 1.0
+        A[v, j] = 1.0
+    return Assignment(A=A, name=name, graph=graph)
+
+
+def expander_assignment(m: int, d: int, *, vertex_transitive: bool = True,
+                        seed: int = 0) -> Assignment:
+    """The paper's scheme: d-regular expander on n = 2m/d vertices."""
+    if (2 * m) % d != 0:
+        raise ValueError("need d | 2m")
+    n = 2 * m // d
+    g = make_expander(n, d, vertex_transitive=vertex_transitive, seed=seed)
+    if g.m != m:
+        raise RuntimeError(f"graph has {g.m} edges, wanted {m}")
+    return graph_assignment(g, name=f"expander(d={d})")
+
+
+def frc_assignment(m: int, d: int) -> Assignment:
+    """FRC of [4]: machines partitioned into n = m/d groups of d; every
+    machine in group i holds (only) block i. Optimal for random
+    stragglers (error p^d), worst-possible adversarially (error p)."""
+    if m % d != 0:
+        raise ValueError("need d | m")
+    n = m // d
+    A = np.zeros((n, m), dtype=np.float64)
+    for j in range(m):
+        A[j // d, j] = 1.0
+    return Assignment(A=A, name=f"frc(d={d})")
+
+
+def adjacency_assignment(graph: Graph, name: str = "adjacency") -> Assignment:
+    """Expander code of [6]: n blocks = n machines = vertices of G;
+    machine j holds the blocks of its neighbours (A = Adj(G))."""
+    return Assignment(A=graph.adjacency().astype(np.float64), name=name,
+                      graph=graph)
+
+
+def bernoulli_assignment(n: int, m: int, d: int, seed: int = 0) -> Assignment:
+    """rBGC-flavoured random assignment [8]: each (block, machine) entry
+    is 1 independently with probability d/m, regularized so every block
+    appears at least once."""
+    rng = np.random.default_rng(seed)
+    A = (rng.random((n, m)) < d / m).astype(np.float64)
+    for i in range(n):  # regularization: no empty rows
+        if not A[i].any():
+            A[i, rng.integers(m)] = 1.0
+    return Assignment(A=A, name=f"bernoulli(d={d})")
+
+
+def uncoded_assignment(m: int) -> Assignment:
+    """No replication: block i on machine i only (ignore stragglers)."""
+    return Assignment(A=np.eye(m, dtype=np.float64), name="uncoded")

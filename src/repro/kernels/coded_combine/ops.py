@@ -1,0 +1,39 @@
+"""Public wrapper for the coded gradient combine.
+
+Applies w-weighted summation across the leading (block/machine) axis of
+every leaf of a gradient pytree. Backend dispatch as in the other
+kernels. No custom_vjp: this runs on gradients (no higher-order autodiff
+needed in the training loop); the jnp fallback remains differentiable
+anyway.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+_FORCE = None  # None | "ref" | "pallas"
+
+
+def coded_combine(grads: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """grads: (n_blocks, D); w: (n_blocks,) -> (D,)."""
+    if _FORCE == "ref":
+        return ref.coded_combine(grads, w)
+    if _FORCE == "pallas":
+        return kernel.coded_combine(
+            grads, w, interpret=jax.default_backend() != "tpu")
+    if jax.default_backend() == "tpu":
+        return kernel.coded_combine(grads, w)
+    return ref.coded_combine(grads, w)
+
+
+def coded_combine_tree(grad_tree, w: jnp.ndarray):
+    """Weighted-sum the leading axis of every leaf: leaf (n_blocks, ...)
+    -> (...). Leaves are flattened to (n_blocks, -1) for the kernel."""
+    def one(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return coded_combine(flat, w).reshape(leaf.shape[1:])
+    return jax.tree.map(one, grad_tree)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the coded gradient combine."""
+
+import jax.numpy as jnp
+
+
+def coded_combine(grads: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """out = sum_b w[b] * grads[b].
+
+    grads: (n_blocks, D); w: (n_blocks,). fp32 accumulation, output in
+    grads.dtype.
+    """
+    out = jnp.einsum("b,bd->d", w.astype(jnp.float32),
+                     grads.astype(jnp.float32))
+    return out.astype(grads.dtype)

@@ -1,0 +1,27 @@
+"""Public wrapper: flash-decode attention with backend dispatch.
+
+Forward-only (serving path). Pallas kernel on TPU; pure-jnp oracle
+elsewhere. ``_FORCE`` is a test hook ("pallas" runs the kernel in
+interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+_FORCE = None  # None | "ref" | "pallas"
+
+
+def decode_attention(q, k, v, lengths, *, block_k: int = 512):
+    """q: (B, H, Dh); k, v: (B, S, KVH, Dh); lengths: (B,)."""
+    if _FORCE == "ref":
+        return ref.decode_attention(q, k, v, lengths)
+    if _FORCE == "pallas":
+        return kernel.decode_attention(
+            q, k, v, lengths, block_k=block_k,
+            interpret=jax.default_backend() != "tpu")
+    if jax.default_backend() == "tpu":
+        return kernel.decode_attention(q, k, v, lengths, block_k=block_k)
+    return ref.decode_attention(q, k, v, lengths)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash-decode attention (one query token vs a long
+KV cache, grouped-query)."""
+
+import jax.numpy as jnp
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, H, Dh); k, v: (B, S, KVH, Dh); lengths: (B,) valid prefix.
+
+    Returns (B, H, Dh). H must be a multiple of KVH (GQA groups).
+    fp32 softmax; output in q.dtype.
+    """
+    B, H, Dh = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = Dh ** -0.5
+    # scores: (B, KVH, G, S)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * scale
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, vf)
+    return out.reshape(B, H, Dh).astype(q.dtype)

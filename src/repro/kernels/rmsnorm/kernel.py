@@ -1,0 +1,67 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Tiling: grid over row blocks; each step loads a (block_rows, d) VMEM
+tile, reduces mean-of-squares in fp32 on the VPU, rescales, and writes
+back. ``d`` stays whole per tile (the reduction axis must be resident);
+block_rows is chosen so the tile fits comfortably in VMEM
+(block_rows * d * 4B <= ~2 MiB), with the row dimension padded to the
+8-sublane boundary by pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _pick_block_rows(rows: int, d: int) -> int:
+    budget = 2 * 1024 * 1024 // (4 * max(d, 1))  # ~2 MiB fp32 tile
+    br = max(8, min(rows, budget))
+    # round down to a multiple of 8 sublanes when possible
+    if br > 8:
+        br -= br % 8
+    return max(1, min(br, rows))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret",
+                                             "block_rows"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+            interpret: bool = False, block_rows: int | None = None
+            ) -> jnp.ndarray:
+    """x: (..., d); scale: (d,). Returns same shape/dtype as x."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = block_rows or _pick_block_rows(rows, d)
+    # pad rows to a multiple of br
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,59 @@
+"""jit'd public wrapper for RMSNorm.
+
+Differentiable everywhere: custom_vjp whose forward dispatches to the
+Pallas kernel on TPU (ref oracle elsewhere) and whose backward is the
+closed-form jnp gradient. ``force`` overrides dispatch for tests:
+"pallas" (interpret on CPU), "ref", or None (auto).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+_FORCE = None  # test hook: None | "ref" | "pallas"
+
+
+def _forward(x, scale, eps):
+    if _FORCE == "ref":
+        return ref.rmsnorm(x, scale, eps=eps)
+    if _FORCE == "pallas":
+        return kernel.rmsnorm(x, scale, eps=eps,
+                              interpret=jax.default_backend() != "tpu")
+    if jax.default_backend() == "tpu":
+        return kernel.rmsnorm(x, scale, eps=eps)
+    return ref.rmsnorm(x, scale, eps=eps)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, scale, eps=1e-6):
+    return _forward(x, scale, eps)
+
+
+def _fwd(x, scale, eps):
+    return _forward(x, scale, eps), (x, scale)
+
+
+def _bwd(eps, res, g):
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = (var + eps) ** -0.5
+    xhat = xf * inv
+    # y = xhat * scale
+    dscale = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1)))
+    gx_hat = gf * sf
+    # dxhat/dx: inv * (I - xhat xhat^T / d)
+    dx = inv * (gx_hat - xhat * jnp.mean(gx_hat * xhat, axis=-1,
+                                         keepdims=True))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

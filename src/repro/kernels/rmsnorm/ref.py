@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+            eps: float = 1e-6) -> jnp.ndarray:
+    """y = x / sqrt(mean(x^2) + eps) * scale, reduction in fp32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

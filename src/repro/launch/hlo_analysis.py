@@ -1,0 +1,249 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body
+*once*, ignoring its trip count -- useless for scanned-layer /
+microbatched programs (verified: a 10-iteration scan of a 512^3 matmul
+reports 1x the FLOPs). This module re-derives the dominant roofline
+terms from the optimized HLO text:
+
+  * splits the module into computations and builds per-computation
+    symbol tables (instruction name -> shape),
+  * recovers each while loop's trip count from its
+    ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the
+    largest integer constant in the condition computation),
+  * propagates call-graph multipliers (while bodies multiply by trip
+    count; fusions/calls/conditional branches by 1),
+  * per computation counts: matmul FLOPs (dot ops: 2 * |out| *
+    contracted extent), dot operand/result bytes (HBM-traffic proxy for
+    the MXU-dominant ops), and collective bytes (output shapes of
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute).
+
+Elementwise FLOPs are ignored (matmuls dominate all assigned archs) and
+the byte proxy undercounts pure-VPU traffic; both caveats are recorded
+in EXPERIMENTS.md. Collective bytes are exact up to trip counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_REFS = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_REFS = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+
+def _parse_shapes(text: str):
+    """All (dtype, dims list) found in a type string."""
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str     # result type (may be a tuple)
+    op: str           # opcode token
+    rest: str         # remainder of the line
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]  # instr name -> result type string
+
+
+_OPCODE = re.compile(r"^((?:\([^)]*\)|[\w\[\]\{\},\d]+)*?)\s*"
+                     r"([a-z][\w\-]*)\(")
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        # Header: "%name (params...) -> type {" -- distinguished from an
+        # instruction by having no '=' before the first '(' (parameter
+        # lists may contain /*index=N*/ comments, so checking the whole
+        # prefix fails).
+        first_paren = s.find("(")
+        is_header = (s.endswith("{") and "->" in s and first_paren > 0
+                     and "=" not in s[:first_paren])
+        if is_header:
+            name = s.split()[0].lstrip("%")
+            if name == "ENTRY":
+                name = s.split()[1].lstrip("%")
+            cur = Computation(name=name, instrs=[], shapes={})
+            comps[name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs = "<type> <opcode>(...)..." where type may contain parens
+        om = re.search(r"([a-z][\w\-]*)\(", rhs)
+        if not om:
+            continue
+        type_str = rhs[:om.start()].strip()
+        op = om.group(1)
+        cur.instrs.append(Instr(name=name, type_str=type_str, op=op,
+                                rest=rhs[om.start():]))
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def computation_multipliers(hlo: str):
+    comps = split_computations(hlo)
+    entry = _entry_name(hlo)
+    if entry is None or entry not in comps:
+        entry = next((n for n in comps if "main" in n),
+                     list(comps)[-1] if comps else None)
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, k: int):
+        if name not in comps or k == 0:
+            return
+        mult[name] = mult.get(name, 0) + k
+        for ins in comps[name].instrs:
+            if ins.op == "while":
+                wm = _WHILE_REFS.search(ins.rest)
+                tm = _TRIP.search(ins.rest)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm and wm and wm.group(1) in comps:
+                    best = 1
+                    for ci in comps[wm.group(1)].instrs:
+                        for c in re.finditer(r"constant\((\d+)\)",
+                                             ci.rest):
+                            best = max(best, int(c.group(1)))
+                    trips = best
+                if wm:
+                    visit(wm.group(1), k * trips)
+                    visit(wm.group(2), k * trips)
+                continue
+            for cm in _CALL_REFS.finditer(ins.rest):
+                visit(cm.group(1), k)
+            bm = _BRANCHES.search(ins.rest)
+            if bm:
+                for b in bm.group(1).split(","):
+                    visit(b.strip().lstrip("%"), k)
+
+    if entry:
+        visit(entry, 1)
+    return mult, comps
+
+
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_stats(ins: Instr, shapes: Dict[str, str]):
+    """(flops, bytes) for a dot instruction."""
+    out_shapes = _parse_shapes(ins.type_str)
+    out_elems = 0
+    out_bytes = 0
+    for dt, dims in out_shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+        out_bytes += n * _DTYPE_BYTES[dt]
+    paren = ins.rest[ins.rest.index("("):]
+    arg_part = paren.split(")")[0]
+    operand_names = _OPERANDS.findall(arg_part)
+    contract = 1
+    in_bytes = 0
+    if operand_names:
+        lhs_type = shapes.get(operand_names[0], "")
+        lhs_shapes = _parse_shapes(lhs_type)
+        cm = _LHS_CONTRACT.search(ins.rest)
+        if cm and lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for d in (int(x) for x in cm.group(1).split(",") if x):
+                if d < len(dims):
+                    contract *= dims[d]
+        for on in operand_names[:2]:
+            in_bytes += _shape_bytes(shapes.get(on, ""))
+    return 2 * out_elems * contract, out_bytes + in_bytes
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    """Loop-corrected {flops, dot_bytes, collective_bytes, collectives,
+    n_while, max_trip}."""
+    mult, comps = computation_multipliers(hlo)
+    flops = 0
+    dot_bytes = 0
+    coll: Dict[str, int] = {}
+    n_while = 0
+    max_trip = 1
+    for name, comp in comps.items():
+        k = mult.get(name, 0)
+        if k == 0:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                f, b = _dot_stats(ins, comp.shapes)
+                flops += k * f
+                dot_bytes += k * b
+            elif ins.op.rstrip("-start") in _COLLECTIVE_OPS or \
+                    any(ins.op == c or ins.op == c + "-start"
+                        for c in _COLLECTIVE_OPS):
+                base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+                nbytes = _shape_bytes(ins.type_str)
+                coll[base] = coll.get(base, 0) + k * nbytes
+            elif ins.op == "while":
+                n_while += 1
+                tm = _TRIP.search(ins.rest)
+                if tm:
+                    max_trip = max(max_trip, int(tm.group(1)))
+    return {
+        "flops": float(flops),
+        "dot_bytes": float(dot_bytes),
+        "collective_bytes": float(sum(coll.values())),
+        "collectives": {k_: float(v) for k_, v in coll.items()},
+        "n_while": n_while,
+        "max_trip": max_trip,
+    }

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state; the dry-run sets
+XLA_FLAGS before any jax import to get 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod: a leading
+    pod=2 axis = 512 chips. Coded gradient workers live on the
+    (pod, data) axes; tensor parallelism on the model axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def num_coded_workers(mesh) -> int:
+    m = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        m *= mesh.shape["pod"]
+    return m

@@ -1,0 +1,96 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Batched serving driver: prefill a batch of prompts, then decode
+tokens autoregressively with the per-architecture cache (KV / SSM state
+/ xLSTM state). CPU demo uses smoke configs; the same driver drives the
+production mesh on TPU.
+
+  python -m repro.launch.serve --arch xlstm-1.3b --batch 4 --new-tokens 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.smoke_variant()
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+    B = args.batch
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, args.prompt_len)), jnp.int32)
+
+    kw = {}
+    if cfg.arch_type == "vlm":
+        kw["prefix"] = jnp.asarray(
+            rng.normal(size=(B, cfg.prefix_len, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+    src = None
+    if cfg.arch_type == "audio":
+        src = jnp.asarray(
+            rng.normal(size=(B, cfg.prefix_len, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+        kw["src"] = src
+
+    # Prefill: run the full forward; then replay the prompt through the
+    # decode path to build the cache (cache-building prefill fused into
+    # one pass is a serving optimisation; the decode path is the
+    # correctness reference and works for every arch family).
+    t0 = time.time()
+    last_logits = M.prefill(params, prompts, cfg, **kw)
+    print(f"prefill[{args.arch}] batch={B} len={args.prompt_len} "
+          f"({time.time() - t0:.2f}s)")
+
+    cache = M.init_decode_cache(
+        cfg, B, args.max_len,
+        src_len=cfg.prefix_len if cfg.arch_type == "audio" else 0)
+    if cfg.arch_type == "audio":
+        cache["enc"] = M.encode(params, src, cfg)
+
+    step = jax.jit(lambda p, t, c: M.decode_step(p, t, c, cfg))
+    # replay prompt tokens to populate the cache
+    for i in range(args.prompt_len):
+        logits, cache = step(params, prompts[:, i], cache)
+
+    out_tokens = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for i in range(args.new_tokens):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"decoded {args.new_tokens} tokens x {B} reqs in {dt:.2f}s "
+          f"({B * args.new_tokens / dt:.1f} tok/s)")
+    print("sample:", gen[0][:12].tolist())
+    assert not np.isnan(np.asarray(logits)).any()
+    return {"tokens": gen}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape),
+plus their shardings -- the dry-run's contract. No device allocation
+happens here (the shannon/kernels pattern: weak-type-correct stand-ins).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeSpec, CodingConfig,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                LONG_500K)
+from repro.dist import sharding as rules
+from repro.models import model as M
+from repro.optim import optimizers as opt_mod
+from .mesh import num_coded_workers
+
+LONG_WINDOW = 8192  # sliding window used for long_500k serving
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape),
+                                jnp.dtype(dtype))
+
+
+def long_500k_supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Which archs run the 500k decode, and why/why not (DESIGN.md
+    #Arch-applicability)."""
+    if cfg.arch_type == "audio":
+        return False, ("enc-dec with a bounded source window does not "
+                       "define a 500k-token decoder cache; skipped")
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return True, "O(1)-state recurrence"
+    return True, f"sliding-window attention (window={LONG_WINDOW})"
+
+
+def decode_supported(cfg: ModelConfig) -> bool:
+    return True  # all assigned archs are decoders or enc-dec
+
+
+@dataclasses.dataclass
+class StepSpec:
+    """Everything the dry-run needs for one (arch, shape, mesh)."""
+
+    kind: str                       # train | prefill | decode
+    args: tuple                     # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: object           # None = let GSPMD choose
+    window: Optional[int] = None
+    donate: tuple = ()
+
+
+def _coded_geometry(mesh: Mesh, coding: CodingConfig,
+                    global_batch: int) -> Tuple[int, int, int]:
+    m = num_coded_workers(mesh)
+    d = coding.replication
+    n_blocks = 2 * m // d
+    if global_batch % n_blocks:
+        raise ValueError(f"global batch {global_batch} % n_blocks "
+                         f"{n_blocks} != 0")
+    return m, n_blocks, global_batch // n_blocks
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                      coding: CodingConfig):
+    """(batch sds dict, batch sharding dict) for the coded train step."""
+    m, n_blocks, bs = _coded_geometry(mesh, coding, shape.global_batch)
+    load = 2  # graph schemes: two blocks per machine
+    S = shape.seq_len
+    P_len = cfg.prefix_len
+    S_text = S - P_len if cfg.arch_type in ("vlm", "audio") else S
+    da = rules.data_axes(mesh)
+    da = da if len(da) > 1 else da[0]
+
+    def bspec(ndim):
+        return NamedSharding(mesh, P(*([da] + [None] * (ndim - 1))))
+
+    batch = {
+        "tokens": sds((m, load, bs, S_text), jnp.int32),
+        "labels": sds((m, load, bs, S_text), jnp.int32),
+        "block_weight": sds((m, load), jnp.float32),
+    }
+    shardings = {
+        "tokens": bspec(4),
+        "labels": bspec(4),
+        "block_weight": bspec(2),
+    }
+    if cfg.arch_type == "vlm":
+        batch["prefix"] = sds((m, load, bs, P_len, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+        shardings["prefix"] = bspec(5)
+    if cfg.arch_type == "audio":
+        batch["src"] = sds((m, load, bs, P_len, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+        shardings["src"] = bspec(5)
+    return batch, shardings
+
+
+def make_step_spec(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                   coding: Optional[CodingConfig] = None,
+                   optimizer_name: str = "adamw") -> StepSpec:
+    """Build the StepSpec for one (arch, shape) on a mesh."""
+    coding = coding or CodingConfig()
+    params_shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    param_spec = rules.safe_param_specs(params_shapes, mesh)
+    param_shard = rules.named(mesh, param_spec)
+    da = rules.data_axes(mesh)
+    da1 = da if len(da) > 1 else da[0]
+
+    if shape.kind == "train":
+        optimizer = opt_mod.get_optimizer(optimizer_name, 1e-4)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        # Adam moments share the param sharding; step counter replicates.
+        if optimizer_name == "adamw":
+            opt_shard = {"step": NamedSharding(mesh, P()),
+                         "m": param_shard, "v": param_shard}
+        else:
+            opt_shard = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), opt_shapes)
+        batch, batch_shard = train_batch_specs(cfg, shape, mesh, coding)
+        mworkers = num_coded_workers(mesh)
+        wstar = sds((mworkers,), jnp.float32)
+        return StepSpec(
+            kind="train",
+            args=(params_shapes, opt_shapes, batch, wstar),
+            in_shardings=(param_shard, opt_shard, batch_shard,
+                          NamedSharding(mesh, P())),
+            out_shardings=(param_shard, opt_shard, None),
+        )
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        P_len = cfg.prefix_len
+        S_text = S - P_len if cfg.arch_type in ("vlm", "audio") else S
+        batch = {"tokens": sds((B, S_text), jnp.int32)}
+        bshard = {"tokens": NamedSharding(mesh, P(da1, None))}
+        if cfg.arch_type == "vlm":
+            batch["prefix"] = sds((B, P_len, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+            bshard["prefix"] = NamedSharding(mesh, P(da1, None, None))
+        if cfg.arch_type == "audio":
+            batch["src"] = sds((B, P_len, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+            bshard["src"] = NamedSharding(mesh, P(da1, None, None))
+        return StepSpec(kind="prefill", args=(params_shapes, batch),
+                        in_shardings=(param_shard, bshard),
+                        out_shardings=None)
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    window = None
+    if shape.name == "long_500k":
+        ok, _why = long_500k_supported(cfg)
+        if not ok:
+            raise ValueError(f"{cfg.name} does not support long_500k")
+        window = LONG_WINDOW
+    kv_len = min(S, window or cfg.sliding_window or S)
+    src_len = cfg.prefix_len if cfg.arch_type == "audio" else 0
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_decode_cache(
+            cfg.with_overrides(sliding_window=window)
+            if window else cfg, B, kv_len, pos=S - 1, src_len=src_len))
+    batch_repl = B < np.prod([mesh.shape[a] for a in da])
+    cache_spec = rules.cache_specs(cache_shapes, mesh,
+                                   batch_replicated=batch_repl)
+    cache_shard = rules.named(mesh, cache_spec)
+    tok = sds((B,), jnp.int32)
+    tok_shard = NamedSharding(mesh, P() if batch_repl else P(da1))
+    return StepSpec(kind="decode", args=(params_shapes, tok,
+                                         cache_shapes),
+                    in_shardings=(param_shard, tok_shard, cache_shard),
+                    out_shardings=(None, cache_shard),
+                    window=window)

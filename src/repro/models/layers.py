@@ -1,0 +1,100 @@
+"""Shared building blocks: norms, linear, rotary, SwiGLU MLP.
+
+Functional style: every layer is an ``init_*`` returning a param pytree
+plus an ``apply`` that takes (params, inputs). Params are plain nested
+dicts of jnp arrays so pjit sharding rules can pattern-match on paths.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import ops as rmsnorm_ops
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype: str = "float32", scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), _dtype(dtype)) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), _dtype(dtype))
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype: str = "float32"):
+    return {"scale": jnp.ones((d,), _dtype(dtype))}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    return rmsnorm_ops.rmsnorm(x, p["scale"], eps=eps)
+
+
+def init_embedding(key, vocab: int, d: int, dtype: str = "float32"):
+    return {"table": jax.random.normal(key, (vocab, d), _dtype(dtype)) * 0.02}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied unembedding: logits = x @ table^T (fp32 logits)."""
+    return (x.astype(jnp.float32)
+            @ p["table"].astype(jnp.float32).T)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                 # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..,S,Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..,S,1,Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype: str = "float32"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "wi_up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "wo": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(linear(p["wi_gate"], x)) * linear(p["wi_up"], x)
+    return linear(p["wo"], h)

@@ -1,0 +1,180 @@
+"""Mamba2-style selective state space (SSD) block.
+
+Chunked SSD algorithm (Dao & Gu 2024), TPU-adapted: the sequence is
+split into chunks of length Q; within-chunk interactions are a masked
+(decay-weighted) quadratic form that maps onto the MXU, and cross-chunk
+interactions are a short ``lax.scan`` over per-chunk states
+(B, H, N, P). Memory is O(S*Q) per head instead of O(S^2), and the scan
+has S/Q steps, keeping the HLO small.
+
+Scalar-per-head decay a_t = exp(dt_t * A_h) as in Mamba2; B/C projections
+shared across heads (single group). Decode carries the state
+(B, H, N, P) plus a rolling conv window.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+
+def init_ssm(key, d_model: int, d_state: int, *, expand: int = 2,
+             head_p: int = 64, conv_k: int = 4, dtype: str = "float32"):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_p
+    ks = jax.random.split(key, 5)
+    return {
+        # x/z projection kept separate from the small B/C/dt head so the
+        # big output splits on a shard-aligned boundary (d_inner | 16);
+        # a fused [x,z,B,C,dt] projection would split a model-sharded
+        # dim at misaligned offsets and force a full all-gather per
+        # layer (observed: 1.8e12 B/step in the zamba2 dry-run).
+        "xz_proj": init_linear(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "bcdt_proj": init_linear(ks[3], d_model, 2 * d_state + n_heads,
+                                 dtype=dtype),
+        "conv_w": jax.random.normal(
+            ks[1], (conv_k, d_inner), jnp.dtype(dtype)) * (conv_k ** -0.5),
+        "A_log": jnp.zeros((n_heads,), jnp.dtype(dtype)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.dtype(dtype)),
+        "D": jnp.ones((n_heads,), jnp.dtype(dtype)),
+        "out_proj": init_linear(ks[2], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _project(p, u, d_inner, d_state):
+    xz = linear(p["xz_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)
+    bcdt = linear(p["bcdt_proj"], u)
+    Bs, Cs, dt = jnp.split(bcdt, [d_state, 2 * d_state], axis=-1)
+    return x, z, Bs, Cs, dt
+
+
+def ssm_forward(p, u, *, d_state: int, expand: int = 2, head_p: int = 64,
+                chunk: int = 256) -> jnp.ndarray:
+    """u: (B, S, D) -> (B, S, D). Chunked SSD."""
+    B, S, D = u.shape
+    d_inner = expand * D
+    H = d_inner // head_p
+    x, z, Bs, Cs, dt = _project(p, u, d_inner, d_state)
+
+    # Causal depthwise conv on x.
+    K = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    x = sum(xp[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+            for i in range(K))
+    x = jax.nn.silu(x)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    # per-step log decay: (B, S, H), <= 0
+    la = dt * A[None, None, :]
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    xh = x.reshape(B, nc, Q, H, head_p).astype(jnp.float32)
+    Bc = Bs.reshape(B, nc, Q, d_state).astype(jnp.float32)
+    Cc = Cs.reshape(B, nc, Q, d_state).astype(jnp.float32)
+    lac = la.reshape(B, nc, Q, H)
+    dtc = dt.reshape(B, nc, Q, H)
+
+    cum = jnp.cumsum(lac, axis=2)                    # (B,nc,Q,H)
+    total = cum[:, :, -1, :]                         # (B,nc,H)
+
+    # --- intra-chunk (quadratic, MXU-friendly) ---
+    # decay(i,j) = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])
+    decay = jnp.where(causal[None, None, :, :, None],
+                      jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)            # (B,nc,Q,Q)
+    scores = cb[..., None] * decay                        # (B,nc,Q,Q,H)
+    xdt = xh * dtc[..., None]                             # dt-weighted input
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+    # --- chunk states and cross-chunk recurrence ---
+    # state contribution of step j: exp(total - cum_j) * dt_j B_j x_j
+    w_end = jnp.exp(total[:, :, None, :] - cum)           # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                        Bc, w_end * dtc, xh)              # (B,nc,H,N,P)
+
+    def chunk_step(h_prev, inp):
+        st, tot = inp  # (B,H,N,P), (B,H)
+        h_new = jnp.exp(tot)[..., None, None] * h_prev + st
+        return h_new, h_prev  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((B, H, d_state, head_p), jnp.float32)
+    _, h_in = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                       # (B,nc,H,N,P)
+
+    # inter-chunk output: y_i += exp(cum_i) * C_i . h_in
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(cum), h_in)
+
+    y = (y_intra + y_inter).reshape(B, Sp, H, head_p)
+    y = y + xh.reshape(B, Sp, H, head_p) * p["D"].astype(
+        jnp.float32)[None, None, :, None]
+    y = y[:, :S].reshape(B, S, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y)
+
+
+def ssm_decode(p, u, state, *, d_state: int, expand: int = 2,
+               head_p: int = 64) -> Tuple[jnp.ndarray, dict]:
+    """Single-step recurrence. u: (B, 1, D).
+
+    state = {"h": (B, H, N, P) fp32, "conv": (B, K-1, d_inner)}.
+    """
+    B, _, D = u.shape
+    d_inner = expand * D
+    H = d_inner // head_p
+    x, z, Bs, Cs, dt = _project(p, u, d_inner, d_state)
+
+    K = p["conv_w"].shape[0]
+    win = jnp.concatenate([state["conv"], x], axis=1)      # (B, K, d_inner)
+    x = sum(win[:, i:i + 1] * p["conv_w"][i].astype(x.dtype)
+            for i in range(K))
+    x = jax.nn.silu(x)
+    new_conv = win[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                           # (B,H)
+
+    xh = x[:, 0].reshape(B, H, head_p).astype(jnp.float32)
+    Bv = Bs[:, 0].astype(jnp.float32)                      # (B,N)
+    Cv = Cs[:, 0].astype(jnp.float32)
+    h = a[..., None, None] * state["h"] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bv, dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y), {"h": h, "conv": new_conv}
+
+
+def init_ssm_state(batch: int, d_model: int, d_state: int, *,
+                   expand: int = 2, head_p: int = 64, conv_k: int = 4):
+    d_inner = expand * d_model
+    H = d_inner // head_p
+    return {
+        "h": jnp.zeros((batch, H, d_state, head_p), jnp.float32),
+        "conv": jnp.zeros((batch, conv_k - 1, d_inner), jnp.float32),
+    }

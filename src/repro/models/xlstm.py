@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation notes (see DESIGN.md): the mLSTM is implemented in its
+chunked-parallel form -- a decay-gated linear attention with per-head
+matrix state (P x P), structurally the same chunking as the Mamba2 SSD
+block so both map onto the MXU. Gating uses log-sigmoid forget gates and
+sigmoid input gates (the exponential-gate stabiliser of the paper is
+replaced by the bounded sigmoid parameterisation; the max-stabilised
+exponential gate has no closed chunked form that avoids materialising
+per-step running maxima, and on TPU the bounded form is the standard
+numerically-safe choice). The sLSTM keeps per-unit scalar cells c, n
+with diagonal gating and drops the hidden-to-hidden recurrence matrix R
+so the cell admits a parallel associative scan; this is noted as a
+deviation (the R-matrix form is strictly sequential, which would defeat
+the 500k-token decode target).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype: str = "float32"):
+    P = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_linear(ks[0], d_model, d_model, dtype=dtype),
+        "wk": init_linear(ks[1], d_model, d_model, dtype=dtype),
+        "wv": init_linear(ks[2], d_model, d_model, dtype=dtype),
+        "w_gates": init_linear(ks[3], d_model, 2 * n_heads, dtype=dtype),
+        "wo": init_linear(ks[4], d_model, d_model, dtype=dtype),
+    }
+
+
+def mlstm_forward(p, u, *, n_heads: int, chunk: int = 256) -> jnp.ndarray:
+    """u: (B, S, D) -> (B, S, D). Chunked decay-gated linear attention."""
+    B, S, D = u.shape
+    P = D // n_heads
+    H = n_heads
+    q = linear(p["wq"], u).reshape(B, S, H, P)
+    k = linear(p["wk"], u).reshape(B, S, H, P) * (P ** -0.5)
+    v = linear(p["wv"], u).reshape(B, S, H, P)
+    gates = linear(p["w_gates"], u).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gates[..., :H])                # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., H:])             # (B,S,H) <= 0
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    Sp = q.shape[1]
+    nc = Sp // Q
+
+    qc = q.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    ic = i_gate.reshape(B, nc, Q, H)
+    lfc = log_f.reshape(B, nc, Q, H)
+
+    cum = jnp.cumsum(lfc, axis=2)
+    total = cum[:, :, -1, :]
+
+    # intra-chunk
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    qk = jnp.einsum("bcihp,bcjhp->bcijh", qc, kc)
+    scores = qk * decay * ic[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, vc)
+
+    # chunk states: C (B,nc,H,P,P), n (B,nc,H,P)
+    w_end = jnp.exp(total[:, :, None, :] - cum) * ic        # (B,nc,Q,H)
+    stateC = jnp.einsum("bcjh,bcjhp,bcjhr->bchpr", w_end, kc, vc)
+    stateN = jnp.einsum("bcjh,bcjhp->bchp", w_end, kc)
+
+    def chunk_step(carry, inp):
+        Cp, Np = carry
+        sC, sN, tot = inp
+        dec = jnp.exp(tot)[..., None, None]
+        C_new = dec * Cp + sC
+        N_new = dec[..., 0] * Np + sN
+        return (C_new, N_new), (Cp, Np)
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    N0 = jnp.zeros((B, H, P), jnp.float32)
+    _, (C_in, N_in) = jax.lax.scan(
+        chunk_step, (C0, N0),
+        (jnp.moveaxis(stateC, 1, 0), jnp.moveaxis(stateN, 1, 0),
+         jnp.moveaxis(total, 1, 0)))
+    C_in = jnp.moveaxis(C_in, 0, 1)
+    N_in = jnp.moveaxis(N_in, 0, 1)
+
+    dec_i = jnp.exp(cum)                                    # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcihp,bcih,bchpr->bcihr", qc, dec_i, C_in)
+    n_inter = jnp.einsum("bcihp,bcih,bchp->bcih", qc, dec_i, N_in)
+
+    # intra normalizer: q_i . (sum_j decay i_j k_j) == scores summed over j
+    qn_intra = scores.sum(axis=3)                           # (B,nc,Q,H)
+    denom = jnp.maximum(jnp.abs(qn_intra + n_inter), 1.0)[..., None]
+    y = (y_intra + y_inter) / denom
+    y = y.reshape(B, Sp, D)[:, :S].astype(u.dtype)
+    return linear(p["wo"], y)
+
+
+def mlstm_decode(p, u, state, *, n_heads: int) -> Tuple[jnp.ndarray, dict]:
+    """u: (B, 1, D); state = {"C": (B,H,P,P), "n": (B,H,P)} fp32."""
+    B, _, D = u.shape
+    H, P = n_heads, D // n_heads
+    q = linear(p["wq"], u).reshape(B, H, P).astype(jnp.float32)
+    k = (linear(p["wk"], u).reshape(B, H, P) * (P ** -0.5)).astype(
+        jnp.float32)
+    v = linear(p["wv"], u).reshape(B, H, P).astype(jnp.float32)
+    gates = linear(p["w_gates"], u).astype(jnp.float32)[:, 0]
+    i_g = jax.nn.sigmoid(gates[..., :H])
+    f_g = jax.nn.sigmoid(gates[..., H:])
+    C = f_g[..., None, None] * state["C"] + i_g[..., None, None] * \
+        jnp.einsum("bhp,bhr->bhpr", k, v)
+    n = f_g[..., None] * state["n"] + i_g[..., None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), 1.0)
+    y = (num / den[..., None]).reshape(B, 1, D).astype(u.dtype)
+    return linear(p["wo"], y), {"C": C, "n": n}
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int):
+    P = d_model // n_heads
+    return {"C": jnp.zeros((batch, n_heads, P, P), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, P), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, dtype: str = "float32"):
+    ks = jax.random.split(key, 2)
+    return {
+        # z, i, f, o per hidden unit
+        "w_in": init_linear(ks[0], d_model, 4 * d_model, dtype=dtype),
+        "wo": init_linear(ks[1], d_model, d_model, dtype=dtype),
+    }
+
+
+def slstm_forward(p, u) -> jnp.ndarray:
+    """u: (B, S, D). Parallel associative scan over the diagonal cell."""
+    B, S, D = u.shape
+    zifo = linear(p["w_in"], u).astype(jnp.float32)
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+
+    def combine(a, b):
+        # recurrences c_t = f c + i z and n_t = f n + i share decay f
+        (fa, ca, na), (fb, cb, nb) = a, b
+        return (fa * fb, fb * ca + cb, fb * na + nb)
+
+    c, n = jax.lax.associative_scan(
+        combine, (f, i * z, i), axis=1)[1:]
+    h = o * c / jnp.maximum(n, 1e-6)
+    return linear(p["wo"], h.astype(u.dtype))
+
+
+def slstm_decode(p, u, state) -> Tuple[jnp.ndarray, dict]:
+    """state = {"c": (B, D), "n": (B, D)} fp32."""
+    zifo = linear(p["w_in"], u).astype(jnp.float32)[:, 0]
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c = f * state["c"] + i * z
+    n = f * state["n"] + i
+    h = (o * c / jnp.maximum(n, 1e-6))[:, None].astype(u.dtype)
+    return linear(p["wo"], h), {"c": c, "n": n}
+
+
+def init_slstm_state(batch: int, d_model: int):
+    return {"c": jnp.zeros((batch, d_model), jnp.float32),
+            "n": jnp.zeros((batch, d_model), jnp.float32)}

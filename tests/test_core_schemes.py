@@ -1,0 +1,141 @@
+"""Assignments, stragglers, theory bounds, debiasing, coded GD."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Assignment, BernoulliStragglers,
+                        FixedCountStragglers, LeastSquares,
+                        MarkovStragglers, adjacency_assignment,
+                        adversarial_mask, bernoulli_assignment,
+                        debias_assignment, decode, estimate_mean_alpha,
+                        expander_assignment, frc_assignment, gcod,
+                        graph_assignment, monte_carlo_error,
+                        normalized_error, random_regular_graph, sgd_alg,
+                        theory, uncoded_assignment)
+
+
+def test_assignment_properties():
+    A = expander_assignment(24, 4, vertex_transitive=False, seed=0)
+    assert A.n == 12 and A.m == 24
+    assert A.replication_factor == pytest.approx(4.0)
+    assert A.load == 2
+    # every machine holds exactly the two endpoints of its edge
+    for j in range(A.m):
+        assert len(A.blocks_of_machine(j)) == 2
+    F = frc_assignment(12, 3)
+    assert F.n == 4 and F.load == 1
+    assert F.replication_factor == pytest.approx(3.0)
+    U = uncoded_assignment(5)
+    assert U.replication_factor == 1.0
+    B = bernoulli_assignment(16, 32, 4, seed=0)
+    assert (B.A.sum(axis=1) >= 1).all()
+
+
+def test_straggler_models():
+    rng = np.random.default_rng(0)
+    for model in (BernoulliStragglers(m=200, p=0.3),
+                  FixedCountStragglers(m=200, p=0.3),
+                  MarkovStragglers(m=200, p=0.3)):
+        alives = np.stack([model.sample(rng) for _ in range(300)])
+        frac = 1 - alives.mean()
+        assert 0.2 < frac < 0.4, (type(model).__name__, frac)
+    # fixed count is exact
+    fc = FixedCountStragglers(m=200, p=0.3)
+    assert (~fc.sample(rng)).sum() == 60
+
+
+def test_markov_stragglers_are_stagnant():
+    rng = np.random.default_rng(0)
+    m = MarkovStragglers(m=500, p=0.2, persistence=20.0)
+    a1 = m.sample(rng)
+    a2 = m.sample(rng)
+    # consecutive masks highly correlated (stagnation)
+    agree = (a1 == a2).mean()
+    assert agree > 0.9
+
+
+def test_adversarial_attack_graph_isolates_blocks():
+    A = expander_assignment(48, 4, vertex_transitive=False, seed=0)
+    alive = adversarial_mask(A, 0.25)
+    assert (~alive).sum() <= 12
+    res = decode(A, alive, method="optimal")
+    err = normalized_error(res.alpha)
+    # attack approaches the p/2 lower bound and respects Cor V.2
+    lam = A.graph.spectral_expansion()
+    assert err <= theory.adversarial_bound_graph(0.25, 4, lam) + 1e-9
+    assert err >= 0.5 * theory.adversarial_lower_bound_graph(0.25)
+
+
+def test_adversarial_frc_much_worse():
+    F = frc_assignment(48, 4)
+    A = expander_assignment(48, 4, vertex_transitive=False, seed=0)
+    p = 0.25
+    err_f = normalized_error(
+        decode(F, adversarial_mask(F, p), method="optimal").alpha)
+    err_a = normalized_error(
+        decode(A, adversarial_mask(A, p), method="optimal").alpha)
+    assert err_f > err_a
+
+
+def test_debias_construction():
+    """Prop B.1: the debiased scheme has E[alpha-hat] ~ 1."""
+    A = bernoulli_assignment(16, 64, 4, seed=0)
+    p = 0.2
+    dec = lambda alive: decode(A, alive, method="optimal").alpha
+    mean_alpha = estimate_mean_alpha(A, dec, p, trials=300)
+    eps = float(np.mean((mean_alpha - 1) ** 2)) + 0.01
+    if eps >= 0.5:
+        pytest.skip("scheme too biased for Prop B.1 premise")
+    A_hat = debias_assignment(A, mean_alpha, eps)
+    assert A_hat.n == A.n
+    assert A_hat.load <= 2 * A.load
+
+
+def test_gcod_converges_and_optimal_beats_fixed():
+    prob = LeastSquares.synthetic(N=128, k=16, noise=0.1, n_blocks=16,
+                                  seed=0)
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    model = BernoulliStragglers(m=24, p=0.2)
+    tr_o = gcod(prob, A, model, steps=60, lr=3e-3, method="optimal",
+                p=0.2, seed=0)
+    assert tr_o.errors[-1] < tr_o.errors[0] * 0.1
+    tr_f = gcod(prob, A, model, steps=60, lr=3e-3, method="fixed",
+                p=0.2, seed=0)
+    assert tr_o.errors[-1] <= tr_f.errors[-1] * 1.5
+
+
+def test_sgd_alg_equivalence():
+    """Algorithm 3 with beta ~ P_{alpha*} is stochastically equivalent
+    to Algorithm 2 (same seeds -> same straggler draws -> same path)."""
+    prob = LeastSquares.synthetic(N=64, k=8, noise=0.1, n_blocks=8,
+                                  seed=0)
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=1)
+    p = 0.2
+
+    rng_masks = np.random.default_rng(42)
+    masks = [rng_masks.random(A.m) >= p for _ in range(20)]
+    it = iter(masks)
+
+    def sample_beta(_rng):
+        return decode(A, next(it), method="optimal").alpha
+
+    tr_sgd = sgd_alg(prob, sample_beta, steps=20, lr=1e-3, seed=7)
+
+    class Replay:
+        def __init__(self):
+            self.it = iter(masks)
+
+        def sample(self, rng):
+            return next(self.it)
+
+    tr_gcod = gcod(prob, A, Replay(), steps=20, lr=1e-3,
+                   method="optimal", p=p, seed=7)
+    np.testing.assert_allclose(tr_sgd.errors, tr_gcod.errors, rtol=1e-8)
+
+
+def test_monte_carlo_matches_bounds():
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    r = monte_carlo_error(A, 0.2, trials=300, method="optimal")
+    lb = theory.lower_bound_any_decoding(0.2, 3)
+    assert r["mean_error"] >= lb * 0.8
+    assert r["mean_error"] <= 10 * lb  # near-optimal, not 1/d-far

@@ -1,0 +1,112 @@
+"""Decoder correctness: the O(m) component decoder must agree with the
+pseudoinverse (Eq. 9) on every straggler pattern -- property-tested
+with hypothesis over random graphs and masks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decode, expander_assignment, fixed_decode,
+                        frc_assignment, graph_assignment,
+                        normalized_error, optimal_alpha_graph,
+                        optimal_decode_frc, optimal_decode_graph,
+                        optimal_decode_pinv, random_regular_graph)
+
+
+@st.composite
+def graph_and_mask(draw):
+    n = draw(st.integers(4, 24))
+    d = draw(st.integers(2, min(n - 1, 6)))
+    if (n * d) % 2:
+        n += 1
+    seed = draw(st.integers(0, 10_000))
+    try:
+        g = random_regular_graph(n, d, seed=seed)
+    except RuntimeError:
+        pytest.skip("no simple regular graph sampled")
+    alive = draw(st.lists(st.booleans(), min_size=g.m, max_size=g.m))
+    return g, np.asarray(alive, bool)
+
+
+@given(graph_and_mask())
+@settings(max_examples=60, deadline=None)
+def test_graph_decoder_matches_pseudoinverse(gm):
+    g, alive = gm
+    A = graph_assignment(g)
+    res = optimal_decode_graph(g, alive)
+    ref = optimal_decode_pinv(A, alive)
+    np.testing.assert_allclose(res.alpha, ref.alpha, atol=1e-6)
+    # w is a valid certificate: A w == alpha and w = 0 on stragglers
+    np.testing.assert_allclose(A.A @ res.w, res.alpha, atol=1e-6)
+    assert (res.w[~alive] == 0).all()
+
+
+@given(graph_and_mask())
+@settings(max_examples=40, deadline=None)
+def test_optimality_no_better_w_exists(gm):
+    """alpha* is the projection: any random feasible w does no better."""
+    g, alive = gm
+    A = graph_assignment(g)
+    res = optimal_decode_graph(g, alive)
+    err_opt = res.error()
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        w = rng.normal(size=g.m)
+        w[~alive] = 0.0
+        err = float(np.sum((A.A @ w - 1.0) ** 2))
+        assert err >= err_opt - 1e-8
+
+
+def test_component_characterisation_cycle():
+    """Section III worked example: a path (bipartite) component."""
+    from repro.core.graphs import cycle_graph
+    g = cycle_graph(4)  # square: bipartite when whole
+    # kill one edge -> path of 4 vertices: sides 2/2 balanced -> alpha=1
+    alive = np.array([True, True, True, False])
+    alpha = optimal_alpha_graph(g, alive)
+    np.testing.assert_allclose(alpha, 1.0, atol=1e-9)
+    # kill two adjacent edges -> path of 3 + isolated vertex
+    alive = np.array([True, True, False, False])
+    alpha = optimal_alpha_graph(g, alive)
+    # path 0-1-2: L={0,2}, R={1}: alpha = 1 -/+ 1/3; vertex 3 isolated
+    np.testing.assert_allclose(
+        sorted(alpha), sorted([1 - 1 / 3, 1 + 1 / 3, 1 - 1 / 3, 0.0]),
+        atol=1e-9)
+
+
+def test_odd_cycle_gives_exact_recovery():
+    from repro.core.graphs import cycle_graph
+    g = cycle_graph(5)  # odd cycle, non-bipartite
+    alive = np.ones(5, bool)
+    res = optimal_decode_graph(g, alive)
+    np.testing.assert_allclose(res.alpha, 1.0, atol=1e-9)
+    np.testing.assert_allclose(res.w, 0.5, atol=1e-9)
+
+
+def test_frc_closed_form():
+    A = frc_assignment(12, 3)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        alive = rng.random(12) >= 0.4
+        res = optimal_decode_frc(A, alive)
+        ref = optimal_decode_pinv(A, alive)
+        np.testing.assert_allclose(res.alpha, ref.alpha, atol=1e-9)
+
+
+def test_fixed_decoding_unbiased():
+    A = expander_assignment(24, 4, vertex_transitive=False, seed=0)
+    p = 0.25
+    rng = np.random.default_rng(1)
+    acc = np.zeros(A.n)
+    trials = 4000
+    for _ in range(trials):
+        alive = rng.random(A.m) >= p
+        acc += fixed_decode(A, alive, p).alpha
+    np.testing.assert_allclose(acc / trials, 1.0, atol=0.05)
+
+
+def test_decode_dispatch():
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=0)
+    alive = np.ones(16, bool)
+    res = decode(A, alive, method="optimal")
+    assert normalized_error(res.alpha) < 1e-12

@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+
+from repro.core import graphs as G
+
+
+def test_cycle():
+    g = G.cycle_graph(8)
+    assert g.n == 8 and g.m == 8
+    assert g.is_regular() and g.is_connected()
+    assert g.replication_factor == 2.0
+
+
+def test_complete():
+    g = G.complete_graph(6)
+    assert g.m == 15
+    # K_n has lambda = n (gap d - lambda_2 = (n-1) - (-1))
+    assert g.spectral_expansion() == pytest.approx(6.0, abs=1e-8)
+
+
+def test_random_regular():
+    g = G.random_regular_graph(20, 4, seed=0)
+    assert g.is_regular() and g.is_connected()
+    deg = g.degrees()
+    assert (deg == 4).all()
+    # whp near-Ramanujan: lambda >= d - 2 sqrt(d-1) - 1 slack
+    assert g.spectral_expansion() > 4 - 2 * np.sqrt(3) - 1.0
+
+
+def test_hypercube():
+    g = G.hypercube_graph(4)
+    assert g.n == 16 and g.is_regular()
+    assert g.spectral_expansion() == pytest.approx(2.0, abs=1e-8)
+
+
+def test_paley():
+    g = G.paley_graph(13)
+    assert g.n == 13 and g.is_regular()
+    d = 6
+    lam2 = (np.sqrt(13) - 1) / 2
+    assert g.spectral_expansion() == pytest.approx(d - lam2, abs=1e-6)
+
+
+def test_circulant_vertex_transitive_degree():
+    g = G.circulant_graph(16, (1, 3, 5))
+    assert g.is_regular()
+    assert (g.degrees() == 6).all()
+
+
+@pytest.mark.slow
+def test_lps_graph_is_ramanujan():
+    g = G.lps_graph(5, 13)
+    assert g.n == 2184 and g.m == 6552
+    assert g.is_regular() and g.is_connected()
+    assert g.spectral_expansion() >= 6 - 2 * np.sqrt(5)
+
+
+def test_make_expander_dispatch():
+    assert G.make_expander(8, 7).m == 28          # complete
+    assert G.make_expander(10, 2).m == 10         # cycle
+    g = G.make_expander(16, 4, vertex_transitive=True)
+    assert g.is_regular() and (g.degrees() == 4).all()
+    g2 = G.make_expander(24, 3, vertex_transitive=False, seed=1)
+    assert (g2.degrees() == 3).all()

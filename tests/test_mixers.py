@@ -1,0 +1,114 @@
+"""Sequence-mixer equivalences: chunked/parallel forms vs the exact
+sequential recurrence, and blockwise attention vs the naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm as ssm_mod, xlstm as xlstm_mod
+from repro.models.attention import blockwise_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _naive_attention(q, k, v, causal, window):
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, S, KVH, G, D).astype(np.float32)
+    s = np.einsum("bqhgd,bkhd->bhgqk", qf, np.asarray(k, np.float32))
+    s /= np.sqrt(D)
+    i = np.arange(S)[:, None]
+    j = np.arange(S)[None, :]
+    mask = np.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= j > i - window
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bhgqk,bkhd->bhgqd", p, np.asarray(v, np.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+
+
+@given(st.integers(5, 80), st.booleans(),
+       st.sampled_from([None, 8, 24]), st.sampled_from([8, 16, 32]))
+@settings(max_examples=20, deadline=None)
+def test_blockwise_attention_property(S, causal, window, block):
+    rng = np.random.default_rng(S)
+    B, H, KVH, D = 1, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KVH, D)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              block_q=block, block_k=block)
+    ref = _naive_attention(np.asarray(q), np.asarray(k), np.asarray(v),
+                           causal, window)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=3e-5)
+
+
+@pytest.mark.parametrize("S,chunk", [(37, 16), (64, 64), (5, 8),
+                                     (129, 32)])
+def test_ssd_chunked_equals_sequential(S, chunk):
+    B, D, N = 2, 32, 8
+    p = ssm_mod.init_ssm(KEY, D, N, expand=2, head_p=8)
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, S, D)) * 0.5
+    y = ssm_mod.ssm_forward(p, u, d_state=N, expand=2, head_p=8,
+                            chunk=chunk)
+    state = ssm_mod.init_ssm_state(B, D, N, expand=2, head_p=8)
+    outs = []
+    for t in range(S):
+        yt, state = ssm_mod.ssm_decode(p, u[:, t:t + 1], state,
+                                       d_state=N, expand=2, head_p=8)
+        outs.append(yt)
+    ref = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("S,chunk", [(29, 8), (48, 16), (7, 32)])
+def test_mlstm_chunked_equals_sequential(S, chunk):
+    B, D, H = 2, 32, 4
+    p = xlstm_mod.init_mlstm(KEY, D, H)
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, S, D)) * 0.5
+    y = xlstm_mod.mlstm_forward(p, u, n_heads=H, chunk=chunk)
+    state = xlstm_mod.init_mlstm_state(B, D, H)
+    outs = []
+    for t in range(S):
+        yt, state = xlstm_mod.mlstm_decode(p, u[:, t:t + 1], state,
+                                           n_heads=H)
+        outs.append(yt)
+    ref = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=2e-5)
+
+
+def test_slstm_scan_equals_sequential():
+    B, S, D = 2, 33, 16
+    p = xlstm_mod.init_slstm(KEY, D)
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, S, D)) * 0.5
+    y = xlstm_mod.slstm_forward(p, u)
+    st_ = xlstm_mod.init_slstm_state(B, D)
+    outs = []
+    for t in range(S):
+        yt, st_ = xlstm_mod.slstm_decode(p, u[:, t:t + 1], st_)
+        outs.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.concatenate(outs, 1)), atol=2e-5)
+
+
+def test_ssd_state_is_causal():
+    """Changing a future input must not change past outputs."""
+    B, S, D, N = 1, 24, 16, 4
+    p = ssm_mod.init_ssm(KEY, D, N, expand=2, head_p=8)
+    u = jax.random.normal(jax.random.PRNGKey(2), (B, S, D))
+    y1 = ssm_mod.ssm_forward(p, u, d_state=N, expand=2, head_p=8,
+                             chunk=8)
+    u2 = u.at[:, -1].set(99.0)
+    y2 = ssm_mod.ssm_forward(p, u2, d_state=N, expand=2, head_p=8,
+                             chunk=8)
+    np.testing.assert_allclose(np.asarray(y1[:, :-1]),
+                               np.asarray(y2[:, :-1]), atol=1e-5)
