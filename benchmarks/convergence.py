@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.core import (BernoulliStragglers, LeastSquares,
                         adjacency_assignment, expander_assignment,
-                        frc_assignment, gcod, random_regular_graph,
+                        frc_assignment, gcod, precompute_alphas,
+                        random_regular_graph, uncoded_assignment,
                         uncoded_gd)
 
 
@@ -60,26 +61,38 @@ def run(m: int = 312, d: int = 6, N: int = 312, k: int = 40,
                      "first_error": best["errors"][0]
                      if best["errors"] else float("nan")})
 
+    # The straggler draws only depend on (model, seed), not on lr, so
+    # each scheme's mask stream is decoded once by the batched engine
+    # and replayed across the whole step-size grid.
+    def pre(assignment, method, n_steps=steps):
+        return precompute_alphas(assignment, model(), steps=n_steps,
+                                 method=method, p=p, seed=seed)
+
+    al_opt = pre(A_ours, "optimal")
     add("ours_optimal", lambda lr: gcod(
         prob, A_ours, model(), steps=steps, lr=lr, method="optimal",
-        p=p, seed=seed))
+        p=p, seed=seed, alphas=al_opt))
+    al_fix = pre(A_ours, "fixed")
     add("ours_fixed", lambda lr: gcod(
         prob, A_ours, model(), steps=steps, lr=lr, method="fixed",
-        p=p, seed=seed))
+        p=p, seed=seed, alphas=al_fix))
+    al_frc = pre(A_frc, "optimal")
     add("frc_optimal", lambda lr: gcod(
         prob_frc, A_frc, model(), steps=steps, lr=lr, method="optimal",
-        p=p, seed=seed))
+        p=p, seed=seed, alphas=al_frc))
     # expander code of [6]: adjacency assignment on m vertices. The
     # problem must be re-blocked to n=m blocks.
     prob6 = prob_with(m)
     A6 = adjacency_assignment(random_regular_graph(m, d, seed=3),
                               name="expander6")
+    al_6 = pre(A6, "fixed")
     add("expander6_fixed", lambda lr: gcod(
         prob6, A6, model(), steps=steps, lr=lr, method="fixed", p=p,
-        seed=seed))
+        seed=seed, alphas=al_6))
     # uncoded with d-times more iterations (Remark VIII.1)
+    al_unc = pre(uncoded_assignment(m), "fixed", n_steps=d * steps)
     add("uncoded_ignore", lambda lr: uncoded_gd(
-        prob6, m, p, steps=d * steps, lr=lr, seed=seed))
+        prob6, m, p, steps=d * steps, lr=lr, seed=seed, alphas=al_unc))
     return rows
 
 

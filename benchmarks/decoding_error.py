@@ -18,7 +18,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (adjacency_assignment, expander_assignment,
+from repro.core import (adjacency_assignment, decode, expander_assignment,
                         monte_carlo_error, random_regular_graph, theory)
 
 P_GRID = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3)
@@ -69,6 +69,52 @@ def regime2(trials: int = 30, seed: int = 0) -> List[Dict]:
             "fixed_lower_bound": theory.lower_bound_fixed_decoding(p, 6),
         })
     return rows
+
+
+def speed_report(fast: bool = False) -> Dict:
+    """Decoder throughput at the paper's m=6552 LPS scale: the historical
+    per-trial ``decode`` loop vs the batched engine driving
+    ``monte_carlo_error`` (mask sampling + batched decode + fused
+    debias/error; the O(n^2) covariance step is off on both sides since
+    the seed harness paid it once per call, not per trial).
+
+    Feeds BENCH_decoding.json via ``benchmarks.run`` so the perf
+    trajectory of the decoding path is machine-trackable across PRs.
+    """
+    m, d, p = 6552, 6, 0.1
+    scalar_trials = 3 if fast else 10
+    batched_trials = 1000
+    A = expander_assignment(m, d, vertex_transitive=True, seed=0)
+
+    rng = np.random.default_rng(0)
+    masks = rng.random((scalar_trials, m)) >= p
+    t0 = time.perf_counter()
+    for t in range(scalar_trials):
+        decode(A, masks[t], method="optimal")
+    scalar_s = time.perf_counter() - t0
+
+    # Warm once at the benchmark shape so the jit compile (paid once per
+    # (graph, batch) shape) is not billed to steady-state throughput.
+    monte_carlo_error(A, p, trials=batched_trials, method="optimal",
+                      cov=False)
+    t0 = time.perf_counter()
+    monte_carlo_error(A, p, trials=batched_trials, method="optimal",
+                      cov=False)
+    batched_s = time.perf_counter() - t0
+
+    scalar_tps = scalar_trials / scalar_s
+    batched_tps = batched_trials / batched_s
+    return {
+        "m": m, "d": d, "p": p, "graph": "LPS X^{5,13}",
+        "scalar": {"trials": scalar_trials, "seconds": scalar_s,
+                   "trials_per_sec": scalar_tps},
+        "batched": {"trials": batched_trials, "seconds": batched_s,
+                    "trials_per_sec": batched_tps},
+        "speedup": batched_tps / scalar_tps,
+        "note": ("scalar = per-mask optimal_decode_graph (the seed "
+                 "monte_carlo path); batched = full monte_carlo_error "
+                 "(sampling + batched decode + fused error), cov off"),
+    }
 
 
 def main(fast: bool = False):

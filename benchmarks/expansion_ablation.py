@@ -16,7 +16,10 @@ from repro.core import (cycle_graph, graph_assignment, hypercube_graph,
 from repro.core.graphs import lps_like_cayley_expander
 
 
-def run(p: float = 0.3, trials: int = 300) -> List[Dict]:
+def run(p: float = 0.3, trials: int = 300,
+        backend: str = "auto") -> List[Dict]:
+    """``backend`` selects the batched decoding engine ('numpy'/'jax'/
+    'auto'); every graph's whole trial batch is decoded in one call."""
     cases = [
         ("cycle_n64_d2", cycle_graph(64)),
         ("hypercube_d4", hypercube_graph(4)),              # n=16, lam=2
@@ -28,7 +31,8 @@ def run(p: float = 0.3, trials: int = 300) -> List[Dict]:
     rows = []
     for name, g in cases:
         A = graph_assignment(g, name=name)
-        mc = monte_carlo_error(A, p, trials=trials, method="optimal")
+        mc = monte_carlo_error(A, p, trials=trials, method="optimal",
+                               backend=backend)
         rows.append({"graph": name, "n": g.n, "d": g.replication_factor,
                      "lambda": g.spectral_expansion(), "p": p,
                      "error": mc["mean_error"]})

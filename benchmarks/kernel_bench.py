@@ -13,6 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batched_decoding import batched_optimal_alpha_graph
+from repro.core.graphs import random_regular_graph
+from repro.kernels.batched_alpha import ref as ba_ref
 from repro.kernels.coded_combine import ref as cc_ref
 from repro.kernels.decode_attention import ref as da_ref
 from repro.kernels.rmsnorm import ref as rn_ref
@@ -26,6 +29,30 @@ def _time(fn, *args, reps=20):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def batched_alpha_rows(fast: bool = False):
+    """Rows for the batched decoding subsystem: the fused error
+    reduction oracle and end-to-end engine throughput per backend."""
+    rng = np.random.default_rng(1)
+    rows = []
+
+    trials, n = (512, 1024) if fast else (2048, 2048)
+    a = rng.normal(loc=1.0, scale=0.1, size=(trials, n))
+    us = _time(ba_ref.fused_error, a, 1.01, reps=10)
+    gb = a.size * 8 / 1e9
+    rows.append(("batched_alpha_fused_error_ref", us,
+                 f"{gb / (us / 1e6):.1f}GB/s"))
+
+    g = random_regular_graph(256, 4, seed=0)  # m=512 machines
+    t_b = 256 if fast else 1024
+    masks = rng.random((t_b, g.m)) >= 0.2
+    for backend in ("numpy", "jax"):
+        fn = lambda m_: batched_optimal_alpha_graph(g, m_, backend=backend)
+        us = _time(fn, masks, reps=3)
+        rows.append((f"batched_alpha_engine_{backend}", us,
+                     f"{t_b / (us / 1e6):.0f}trials/s"))
+    return rows
 
 
 def main(fast: bool = False):
@@ -57,6 +84,8 @@ def main(fast: bool = False):
     us = _time(f, g, w)
     gb = g.size * 4 / 1e9
     rows.append(("coded_combine_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+
+    rows.extend(batched_alpha_rows(fast=fast))
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,13 +1,17 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
-``python -m benchmarks.run [--full]`` -- fast mode by default so the
-whole suite stays in CPU-minutes; --full uses the paper-scale settings
-(m=6552 LPS regime etc.).
+``python -m benchmarks.run [--fast|--full]`` -- fast mode by default so
+the whole suite stays in CPU-minutes; --full uses the paper-scale
+settings (m=6552 LPS regime etc.). Every run also emits
+``BENCH_decoding.json``: machine-readable trials/sec for the scalar vs
+batched straggler-decoding paths plus the batched_alpha kernel rows, so
+the decoding perf trajectory is trackable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,10 +19,16 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="fast mode (the default unless --full is given)")
     ap.add_argument("--only", default=None,
                     help="comma list: decoding_error,convergence,"
                          "adversarial,bounds,kernels,roofline")
+    ap.add_argument("--bench-json", default="BENCH_decoding.json",
+                    help="where to write the decoding perf report")
     args = ap.parse_args()
+    if args.full and args.fast:
+        ap.error("--fast and --full are mutually exclusive")
     fast = not args.full
 
     from benchmarks import (adversarial, bounds, convergence,
@@ -35,10 +45,36 @@ def main() -> None:
     }
     wanted = args.only.split(",") if args.only else list(suite)
     t0 = time.time()
+    results = {}
     for name in wanted:
         print(f"\n=== {name} ===")
         sys.stdout.flush()
-        suite[name](fast=fast)
+        results[name] = suite[name](fast=fast)
+
+    if args.only is not None and "decoding_error" not in wanted:
+        # A filtered run of unrelated suites shouldn't pay for (or
+        # overwrite) the decoding perf report.
+        print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+        return
+
+    print("\n=== decoding perf report ===")
+    sys.stdout.flush()
+    report = decoding_error.speed_report(fast=fast)
+    report["mode"] = "fast" if fast else "full"
+    # Reuse the rows the kernels suite just measured rather than timing
+    # the same benchmarks twice.
+    kernel_rows = [r for r in results.get("kernels") or []
+                   if r[0].startswith("batched_alpha")] \
+        or kernel_bench.batched_alpha_rows(fast=fast)
+    report["kernels"] = [
+        {"name": n, "us_per_call": round(us, 1), "derived": derived}
+        for n, us, derived in kernel_rows]
+    with open(args.bench_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.bench_json}: "
+          f"scalar {report['scalar']['trials_per_sec']:.1f} trials/s, "
+          f"batched {report['batched']['trials_per_sec']:.1f} trials/s "
+          f"({report['speedup']:.1f}x)")
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 
 

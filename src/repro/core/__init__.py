@@ -5,6 +5,8 @@ Public surface of the paper's core contribution:
 - graphs:      expander constructions (incl. the exact LPS X^{5,13})
 - assignment:  graph / FRC / adjacency / Bernoulli / uncoded schemes
 - decoding:    O(m) optimal graph decoder, pseudoinverse, fixed
+- batched_decoding: the (trials, m)-at-once alpha* engine (pointer
+               jumping on the double cover; numpy + jittable jax paths)
 - stragglers:  Bernoulli / fixed-count / Markov / adversarial attacks
 - theory:      the paper's closed-form bounds
 - debias:      Prop B.1 black-box debiasing
@@ -21,13 +23,17 @@ from .decoding import (DecodeResult, decode, optimal_alpha_graph,
                        optimal_decode_graph, optimal_decode_pinv,
                        optimal_decode_frc, fixed_decode, normalized_error,
                        monte_carlo_error, debias_alpha)
+from .batched_decoding import (batched_alpha, batched_fixed_alpha,
+                               batched_frc_alpha,
+                               batched_optimal_alpha_graph)
 from .stragglers import (StragglerModel, BernoulliStragglers,
                          FixedCountStragglers, MarkovStragglers,
                          adversarial_mask, adversarial_mask_graph,
                          adversarial_mask_frc)
 from . import theory
 from .debias import debias_assignment, estimate_mean_alpha
-from .coded_gd import LeastSquares, GDTrace, gcod, sgd_alg, uncoded_gd
+from .coded_gd import (LeastSquares, GDTrace, gcod, precompute_alphas,
+                       sgd_alg, uncoded_gd)
 
 __all__ = [
     "Graph", "cycle_graph", "complete_graph", "hypercube_graph",
@@ -39,9 +45,12 @@ __all__ = [
     "DecodeResult", "decode", "optimal_alpha_graph", "optimal_decode_graph",
     "optimal_decode_pinv", "optimal_decode_frc", "fixed_decode",
     "normalized_error", "monte_carlo_error", "debias_alpha",
+    "batched_alpha", "batched_fixed_alpha", "batched_frc_alpha",
+    "batched_optimal_alpha_graph",
     "StragglerModel", "BernoulliStragglers", "FixedCountStragglers",
     "MarkovStragglers", "adversarial_mask", "adversarial_mask_graph",
     "adversarial_mask_frc",
     "theory", "debias_assignment", "estimate_mean_alpha",
-    "LeastSquares", "GDTrace", "gcod", "sgd_alg", "uncoded_gd",
+    "LeastSquares", "GDTrace", "gcod", "precompute_alphas", "sgd_alg",
+    "uncoded_gd",
 ]

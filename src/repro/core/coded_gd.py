@@ -19,7 +19,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .assignment import Assignment
-from .decoding import decode
+from .batched_decoding import batched_alpha
 from .stragglers import StragglerModel, BernoulliStragglers
 
 
@@ -67,42 +67,101 @@ class GDTrace:
     alphas: List[np.ndarray]
 
 
+def _sample_mask_stream(assignment: Assignment,
+                        straggler_model: StragglerModel, *, steps: int,
+                        shuffle: bool, rng: np.random.Generator):
+    """GCOD's RNG consumption protocol -- the rho permutation draw
+    (when shuffling), then one straggler mask per step. The single
+    source of truth shared by ``gcod`` and ``precompute_alphas``, so
+    precomputed alpha batches cannot desync from the in-loop stream.
+
+    Returns (rho, masks) with masks of shape (steps, m).
+    """
+    n = assignment.n
+    rho = rng.permutation(n) if shuffle else np.arange(n)
+    if steps:
+        masks = np.stack(
+            [straggler_model.sample(rng) for _ in range(steps)])
+    else:
+        masks = np.zeros((0, assignment.m), dtype=bool)
+    return rho, masks
+
+
+def precompute_alphas(assignment: Assignment,
+                      straggler_model: StragglerModel, *, steps: int,
+                      method: str = "optimal", p: float = 0.0,
+                      shuffle: bool = True, seed: int = 0,
+                      backend: str = "auto") -> np.ndarray:
+    """Sample the exact mask stream ``gcod(..., shuffle=shuffle,
+    seed=seed)`` would consume and decode it in one batched call.
+
+    Feeding the result back via ``gcod(..., alphas=...)`` reproduces the
+    sampling-in-the-loop run bit-for-bit while skipping per-step
+    decoding -- useful when the same (assignment, model, seed) trace is
+    re-run across a step-size grid, as the Figure 4/5 harness does.
+    """
+    rng = np.random.default_rng(seed)
+    _, masks = _sample_mask_stream(assignment, straggler_model,
+                                   steps=steps, shuffle=shuffle, rng=rng)
+    return batched_alpha(assignment, masks, method=method, p=p,
+                         backend=backend)
+
+
 def gcod(problem: LeastSquares, assignment: Assignment,
          straggler_model: StragglerModel, *, steps: int, lr: float,
          method: str = "optimal", p: float = 0.0,
          shuffle: bool = True, seed: int = 0,
          theta0: Optional[np.ndarray] = None,
-         lr_schedule: Optional[Callable[[int], float]] = None) -> GDTrace:
+         lr_schedule: Optional[Callable[[int], float]] = None,
+         alphas: Optional[np.ndarray] = None,
+         backend: str = "auto") -> GDTrace:
     """Algorithm 2 (GCOD). ``method`` selects optimal vs fixed decoding;
-    ``shuffle`` applies the random block permutation rho."""
+    ``shuffle`` applies the random block permutation rho.
+
+    All straggler masks are sampled up front and decoded by the batched
+    engine (the straggler model only touches the RNG while sampling, so
+    this reorders nothing). ``alphas`` (steps, n) bypasses sampling and
+    decoding entirely -- see ``precompute_alphas``.
+    """
     rng = np.random.default_rng(seed)
     n = assignment.n
     if problem.n_blocks != n:
         raise ValueError("problem blocks must match assignment rows")
-    rho = rng.permutation(n) if shuffle else np.arange(n)
+    # With precomputed alphas no masks are drawn (steps=0), leaving the
+    # rho draw -- and hence the trajectory -- identical either way.
+    rho, masks = _sample_mask_stream(
+        assignment, straggler_model, shuffle=shuffle, rng=rng,
+        steps=steps if alphas is None else 0)
+    if alphas is None:
+        alphas = batched_alpha(assignment, masks, method=method, p=p,
+                               backend=backend)
+    else:
+        alphas = np.asarray(alphas, dtype=np.float64)
+        if alphas.shape != (steps, n):
+            raise ValueError(
+                f"alphas must be ({steps}, {n}), got {alphas.shape}")
     theta_star = problem.minimizer()
     theta = np.zeros(problem.X.shape[1]) if theta0 is None else theta0.copy()
     trace = GDTrace(thetas=[theta.copy()],
                     errors=[float(np.sum((theta - theta_star) ** 2))],
                     alphas=[])
     for t in range(steps):
-        alive = straggler_model.sample(rng)
-        res = decode(assignment, alive, method=method, p=p)
+        alpha = alphas[t]
         # alpha acts on shuffled blocks: block rho(i) receives alpha_i.
         block_grads = problem.block_gradients(theta)  # (n, k)
-        g = (res.alpha[:, None] * block_grads[rho]).sum(axis=0)
+        g = (alpha[:, None] * block_grads[rho]).sum(axis=0)
         step = lr if lr_schedule is None else lr_schedule(t)
         theta = theta - step * g
         trace.thetas.append(theta.copy())
         trace.errors.append(float(np.sum((theta - theta_star) ** 2)))
-        trace.alphas.append(res.alpha)
+        trace.alphas.append(alpha.copy())
     return trace
 
 
 def uncoded_gd(problem: LeastSquares, m: int, p: float, *, steps: int,
                lr: float, seed: int = 0,
-               lr_schedule: Optional[Callable[[int], float]] = None
-               ) -> GDTrace:
+               lr_schedule: Optional[Callable[[int], float]] = None,
+               alphas: Optional[np.ndarray] = None) -> GDTrace:
     """Ignore-stragglers baseline: m machines, one block each, surviving
     gradients summed with weight 1/(1-p) (unbiased)."""
     from .assignment import uncoded_assignment
@@ -110,15 +169,31 @@ def uncoded_gd(problem: LeastSquares, m: int, p: float, *, steps: int,
     assignment = uncoded_assignment(m)
     model = BernoulliStragglers(m=m, p=p)
     return gcod(problem, assignment, model, steps=steps, lr=lr,
-                method="fixed", p=p, seed=seed, lr_schedule=lr_schedule)
+                method="fixed", p=p, seed=seed, lr_schedule=lr_schedule,
+                alphas=alphas)
 
 
 def sgd_alg(problem: LeastSquares,
-            sample_beta: Callable[[np.random.Generator], np.ndarray], *,
+            sample_beta: Optional[
+                Callable[[np.random.Generator], np.ndarray]] = None, *,
             steps: int, lr: float, shuffle: bool = True, seed: int = 0,
-            lr_schedule: Optional[Callable[[int], float]] = None) -> GDTrace:
+            lr_schedule: Optional[Callable[[int], float]] = None,
+            betas: Optional[np.ndarray] = None) -> GDTrace:
     """Algorithm 3 (SGD-ALG): update with externally supplied beta
-    draws. Stochastically equivalent to GCOD when beta ~ P_{alpha*}."""
+    draws. Stochastically equivalent to GCOD when beta ~ P_{alpha*}.
+
+    Betas come either from ``sample_beta`` (one draw per step, as
+    before) or as a precomputed ``betas`` (steps, n) batch, e.g. from
+    ``precompute_alphas`` / ``batched_alpha``.
+    """
+    if (sample_beta is None) == (betas is None):
+        raise ValueError("provide exactly one of sample_beta / betas")
+    if betas is not None:
+        betas = np.asarray(betas, dtype=np.float64)
+        if betas.shape != (steps, problem.n_blocks):
+            raise ValueError(
+                f"betas must be ({steps}, {problem.n_blocks}), "
+                f"got {betas.shape}")
     rng = np.random.default_rng(seed)
     n = problem.n_blocks
     rho = rng.permutation(n) if shuffle else np.arange(n)
@@ -128,7 +203,7 @@ def sgd_alg(problem: LeastSquares,
                     errors=[float(np.sum((theta - theta_star) ** 2))],
                     alphas=[])
     for t in range(steps):
-        beta = sample_beta(rng)
+        beta = betas[t] if betas is not None else sample_beta(rng)
         block_grads = problem.block_gradients(theta)
         g = (beta[:, None] * block_grads[rho]).sum(axis=0)
         step = lr if lr_schedule is None else lr_schedule(t)

@@ -28,7 +28,9 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from ..kernels.batched_alpha import ops as _ba_ops
 from .assignment import Assignment
+from .batched_decoding import batched_alpha, fixed_w
 from .graphs import Graph
 
 
@@ -242,8 +244,7 @@ def fixed_decode(assignment: Assignment, alive: np.ndarray,
     """Section VIII fixed decoding: w_j = 1/(d (1-p)) on survivors, which
     makes E[A w] = 1 for d-regular assignments."""
     alive = np.asarray(alive, dtype=bool)
-    d = assignment.replication_factor
-    w = np.where(alive, 1.0 / (d * (1.0 - p)), 0.0)
+    w = fixed_w(alive, assignment.replication_factor, p)
     return DecodeResult(w=w, alpha=assignment.A @ w)
 
 
@@ -296,28 +297,36 @@ def normalized_error(alpha: np.ndarray) -> float:
 def debias_alpha(alphas: np.ndarray) -> np.ndarray:
     """Normalize a batch of alpha draws by |1|_2 / |E[alpha]|_2
     (the paper's alpha-bar)."""
-    mean = alphas.mean(axis=0)
-    scale = np.sqrt(alphas.shape[1]) / max(np.linalg.norm(mean), 1e-30)
-    return alphas * scale
+    return alphas * _ba_ops.debias_scale(alphas)
 
 
 def monte_carlo_error(assignment: Assignment, p: float, *, trials: int,
                       method: str = "optimal", seed: int = 0,
-                      debias: bool = True) -> dict:
+                      debias: bool = True, backend: str = "auto",
+                      cov: bool = True) -> dict:
     """Estimate E[(1/n)|alpha-bar - 1|^2] and |Cov(alpha-bar)|_2 under
-    Bernoulli(p) stragglers (Figure 3 harness)."""
+    Bernoulli(p) stragglers (Figure 3 harness).
+
+    All masks are sampled up front (the same RNG stream the historical
+    per-trial loop consumed, so results are reproducible across the
+    rewrite) and decoded in one call to the batched engine; the debias
+    rescale and per-trial error reduction run through the fused
+    ``batched_alpha`` kernel (Pallas on TPU, float64 oracle on CPU).
+    ``cov=False`` skips the O(n^2)-memory covariance/spectral-norm step
+    for throughput benchmarks.
+    """
     rng = np.random.default_rng(seed)
-    n, m = assignment.n, assignment.m
-    alphas = np.empty((trials, n), dtype=np.float64)
-    for t in range(trials):
-        alive = rng.random(m) >= p
-        alphas[t] = decode(assignment, alive, method=method, p=p).alpha
-    ab = debias_alpha(alphas) if debias else alphas
-    errs = np.mean((ab - 1.0) ** 2, axis=1)
-    centered = ab - ab.mean(axis=0, keepdims=True)
-    cov = centered.T @ centered / trials
-    return {
+    masks = rng.random((trials, assignment.m)) >= p
+    alphas = batched_alpha(assignment, masks, method=method, p=p,
+                           backend=backend)
+    errs, scale = _ba_ops.fused_error(alphas, debias=debias)
+    out = {
         "mean_error": float(errs.mean()),
         "std_error": float(errs.std()),
-        "cov_norm": float(np.linalg.norm(cov, 2)),
     }
+    if cov:
+        ab = alphas * scale
+        centered = ab - ab.mean(axis=0, keepdims=True)
+        cov_mat = centered.T @ centered / trials
+        out["cov_norm"] = float(np.linalg.norm(cov_mat, 2))
+    return out

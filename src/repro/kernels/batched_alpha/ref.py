@@ -1,0 +1,19 @@
+"""NumPy float64 oracle for the fused batched-alpha error reduction.
+
+This is the CPU path of the batched Monte-Carlo pipeline: it keeps the
+exact float64 arithmetic of the original per-trial harness, so wiring
+the kernel package into ``monte_carlo_error`` changes nothing
+numerically off-TPU.
+"""
+
+import numpy as np
+
+
+def fused_error(alphas: np.ndarray, scale: float) -> np.ndarray:
+    """errs_t = (1/n) |scale * alpha_t - 1|_2^2.
+
+    alphas: (trials, n) float64; scale: the debias factor
+    sqrt(n)/|E[alpha]|_2 (or 1.0). Returns (trials,) float64.
+    """
+    d = alphas * scale - 1.0
+    return np.mean(d * d, axis=1)

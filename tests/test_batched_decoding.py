@@ -1,0 +1,215 @@
+"""Batched decoding engine vs the scalar Section III decoder.
+
+The batched engine must agree with ``optimal_alpha_graph`` *exactly*
+(same float expressions from the same integer side counts), on random
+graphs x random masks and on the structural edge cases: all machines
+dead, all alive, isolated vertices, odd cycles. Property-tested with
+hypothesis when it is installed; the randomized numpy sweeps always run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (BernoulliStragglers, LeastSquares,
+                        batched_alpha, batched_fixed_alpha,
+                        batched_frc_alpha, batched_optimal_alpha_graph,
+                        bernoulli_assignment, decode, expander_assignment,
+                        fixed_decode, frc_assignment, gcod,
+                        graph_assignment, monte_carlo_error,
+                        optimal_alpha_graph, optimal_decode_frc,
+                        optimal_decode_pinv, precompute_alphas,
+                        random_regular_graph, sgd_alg)
+from repro.core.batched_decoding import _HAS_JAX
+from repro.core.graphs import Graph, complete_graph, cycle_graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(0)
+
+
+def _scalar_ref(g, masks):
+    return np.stack([optimal_alpha_graph(g, mk) for mk in masks])
+
+
+def test_batched_matches_scalar_random_graphs():
+    for n, d, seed in [(8, 3, 0), (16, 3, 1), (12, 4, 2), (24, 5, 3),
+                       (64, 4, 0)]:
+        if (n * d) % 2:
+            n += 1
+        g = random_regular_graph(n, d, seed=seed)
+        masks = RNG.random((24, g.m)) >= RNG.uniform(0.1, 0.9)
+        masks[0, :] = True   # all alive
+        masks[1, :] = False  # all dead
+        ref = _scalar_ref(g, masks)
+        out = batched_optimal_alpha_graph(g, masks, backend="numpy")
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_edge_cases_odd_cycle_isolated_all_dead():
+    # odd cycle: non-bipartite when whole -> alpha = 1 exactly
+    g = cycle_graph(5)
+    masks = np.stack([np.ones(5, bool), np.zeros(5, bool),
+                      np.array([True, True, True, True, False]),
+                      np.array([True, True, False, False, False])])
+    out = batched_optimal_alpha_graph(g, masks, backend="numpy")
+    np.testing.assert_array_equal(out[0], np.ones(5))   # odd cycle
+    np.testing.assert_array_equal(out[1], np.zeros(5))  # all dead
+    # one edge dead -> path of 5: sides 3/2, alpha in {1 -/+ 1/5}
+    np.testing.assert_allclose(sorted(out[2]),
+                               [0.8, 0.8, 0.8, 1.2, 1.2], atol=0)
+    np.testing.assert_array_equal(out, _scalar_ref(g, masks))
+    # graph with structurally isolated vertices (no incident edges)
+    g2 = Graph(6, ((0, 1), (1, 2), (3, 4)))
+    masks2 = RNG.random((16, 3)) >= 0.5
+    np.testing.assert_array_equal(
+        batched_optimal_alpha_graph(g2, masks2, backend="numpy"),
+        _scalar_ref(g2, masks2))
+
+
+@pytest.mark.skipif(not _HAS_JAX, reason="jax not installed")
+def test_jax_backend_matches_numpy():
+    for g in (random_regular_graph(16, 3, seed=1), cycle_graph(9),
+              complete_graph(7), Graph(5, ((0, 1), (1, 2)))):
+        masks = RNG.random((32, g.m)) >= 0.4
+        masks[0, :] = True
+        masks[1, :] = False
+        a_np = batched_optimal_alpha_graph(g, masks, backend="numpy")
+        a_jx = batched_optimal_alpha_graph(g, masks, backend="jax")
+        np.testing.assert_array_equal(a_np, a_jx)
+        np.testing.assert_array_equal(a_np, _scalar_ref(g, masks))
+
+
+def test_batched_fixed_and_frc_match_scalar():
+    A = expander_assignment(24, 4, vertex_transitive=False, seed=0)
+    masks = RNG.random((20, A.m)) >= 0.3
+    out = batched_fixed_alpha(A, masks, 0.3)
+    ref = np.stack([fixed_decode(A, mk, 0.3).alpha for mk in masks])
+    np.testing.assert_allclose(out, ref, atol=1e-12)
+
+    F = frc_assignment(12, 3)
+    masks_f = RNG.random((20, 12)) >= 0.4
+    out_f = batched_frc_alpha(F, masks_f)
+    ref_f = np.stack([optimal_decode_frc(F, mk).alpha for mk in masks_f])
+    np.testing.assert_allclose(out_f, ref_f, atol=1e-12)
+    # dispatch mirrors decode(): frc name -> closed form
+    np.testing.assert_array_equal(
+        out_f, batched_alpha(F, masks_f, method="optimal"))
+
+
+def test_batched_fixed_rejects_p_ge_1():
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=0)
+    masks = np.ones((2, 16), bool)
+    with pytest.raises(ValueError, match="p < 1"):
+        batched_fixed_alpha(A, masks, 1.0)
+    with pytest.raises(ValueError, match="p < 1"):
+        fixed_decode(A, np.ones(16, bool), 1.5)
+
+
+def test_batched_pinv_fallback_matches_scalar():
+    A = bernoulli_assignment(8, 16, 3, seed=0)
+    masks = RNG.random((6, 16)) >= 0.3
+    out = batched_alpha(A, masks, method="optimal")
+    ref = np.stack(
+        [optimal_decode_pinv(A, mk).alpha for mk in masks])
+    np.testing.assert_allclose(out, ref, atol=1e-9)
+
+
+def test_mask_shape_validation():
+    g = cycle_graph(4)
+    with pytest.raises(ValueError, match="trials"):
+        batched_optimal_alpha_graph(g, np.ones(4, bool))
+    with pytest.raises(ValueError, match="machines"):
+        batched_optimal_alpha_graph(g, np.ones((3, 5), bool))
+
+
+def test_monte_carlo_error_matches_historical_loop():
+    """The batched monte_carlo pipeline reproduces the per-trial loop
+    bit-for-bit (same RNG stream, same decode values, same debias)."""
+    from repro.core.decoding import debias_alpha
+
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    for method in ("optimal", "fixed"):
+        got = monte_carlo_error(A, 0.2, trials=60, method=method, seed=9)
+        rng = np.random.default_rng(9)
+        alphas = np.empty((60, A.n))
+        for t in range(60):
+            alive = rng.random(A.m) >= 0.2
+            alphas[t] = decode(A, alive, method=method, p=0.2).alpha
+        ab = debias_alpha(alphas)
+        errs = np.mean((ab - 1.0) ** 2, axis=1)
+        centered = ab - ab.mean(axis=0, keepdims=True)
+        cov = centered.T @ centered / 60
+        assert got["mean_error"] == float(errs.mean())
+        assert got["std_error"] == float(errs.std())
+        assert got["cov_norm"] == float(np.linalg.norm(cov, 2))
+    # cov=False drops the covariance (throughput mode)
+    slim = monte_carlo_error(A, 0.2, trials=10, method="optimal", seed=9,
+                             cov=False)
+    assert "cov_norm" not in slim
+
+
+def test_gcod_precomputed_alphas_bit_identical():
+    prob = LeastSquares.synthetic(N=64, k=8, noise=0.1, n_blocks=8,
+                                  seed=0)
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=1)
+    model = lambda: BernoulliStragglers(m=16, p=0.25)
+    base = gcod(prob, A, model(), steps=12, lr=1e-3, method="optimal",
+                p=0.25, seed=3)
+    pre = precompute_alphas(A, model(), steps=12, method="optimal",
+                            p=0.25, seed=3)
+    replay = gcod(prob, A, model(), steps=12, lr=1e-3, method="optimal",
+                  p=0.25, seed=3, alphas=pre)
+    assert base.errors == replay.errors
+    for a, b in zip(base.alphas, replay.alphas):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_sgd_alg_accepts_beta_batch():
+    prob = LeastSquares.synthetic(N=64, k=8, noise=0.1, n_blocks=8,
+                                  seed=0)
+    betas = RNG.normal(loc=1.0, scale=0.1, size=(10, 8))
+    tr_b = sgd_alg(prob, steps=10, lr=1e-3, seed=4, betas=betas)
+    it = iter(betas)
+    tr_s = sgd_alg(prob, lambda _rng: next(it), steps=10, lr=1e-3, seed=4)
+    np.testing.assert_allclose(tr_b.errors, tr_s.errors, rtol=0, atol=0)
+    with pytest.raises(ValueError, match="exactly one"):
+        sgd_alg(prob, steps=10, lr=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def graph_and_masks(draw):
+        n = draw(st.integers(4, 24))
+        d = draw(st.integers(2, min(n - 1, 6)))
+        if (n * d) % 2:
+            n += 1
+        seed = draw(st.integers(0, 10_000))
+        try:
+            g = random_regular_graph(n, d, seed=seed)
+        except RuntimeError:
+            pytest.skip("no simple regular graph sampled")
+        trials = draw(st.integers(1, 8))
+        bits = draw(st.lists(st.booleans(), min_size=trials * g.m,
+                             max_size=trials * g.m))
+        return g, np.asarray(bits, bool).reshape(trials, g.m)
+
+    @given(graph_and_masks())
+    @settings(max_examples=50, deadline=None)
+    def test_property_batched_equals_scalar(gm):
+        g, masks = gm
+        out = batched_optimal_alpha_graph(g, masks, backend="numpy")
+        ref = _scalar_ref(g, masks)
+        np.testing.assert_allclose(out, ref, rtol=0, atol=1e-9)
+        np.testing.assert_array_equal(out, ref)  # in fact bit-exact
+        # and the decode() contract: alpha is A w for w supported on
+        # survivors, so dispatch through an assignment agrees too
+        A = graph_assignment(g)
+        np.testing.assert_array_equal(
+            batched_alpha(A, masks, method="optimal", backend="numpy"),
+            ref)

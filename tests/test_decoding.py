@@ -4,6 +4,10 @@ with hypothesis over random graphs and masks."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (decode, expander_assignment, fixed_decode,

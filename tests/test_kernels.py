@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.batched_alpha import kernel as ba_k, ops as ba_ops, \
+    ref as ba_r
 from repro.kernels.coded_combine import kernel as cc_k, ref as cc_r
 from repro.kernels.decode_attention import kernel as da_k, ref as da_r
 from repro.kernels.rmsnorm import kernel as rn_k, ops as rn_ops, \
@@ -97,6 +99,33 @@ def test_coded_combine_kernel_matches_ref(n, D, dtype):
     ref = cc_r.coded_combine(g, w)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("T,n,bt", [(4, 128, None), (10, 130, 8),
+                                    (64, 1000, 16), (1, 256, None),
+                                    (33, 384, 8)])
+def test_batched_alpha_fused_error_kernel_matches_ref(T, n, bt):
+    a = RNG.normal(loc=1.0, scale=0.2, size=(T, n))
+    scale = float(RNG.uniform(0.5, 1.5))
+    out = ba_k.fused_error(jnp.asarray(a, jnp.float32),
+                           jnp.float32(scale), block_t=bt,
+                           interpret=True)
+    ref = ba_r.fused_error(a, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_batched_alpha_ops_debias_matches_debias_alpha():
+    from repro.core.decoding import debias_alpha
+
+    a = RNG.normal(loc=1.0, scale=0.1, size=(32, 24))
+    errs, scale = ba_ops.fused_error(a, debias=True)
+    ab = debias_alpha(a)
+    np.testing.assert_array_equal(errs, np.mean((ab - 1.0) ** 2, axis=1))
+    np.testing.assert_array_equal(a * scale, ab)
+    errs0, scale0 = ba_ops.fused_error(a, debias=False)
+    assert scale0 == 1.0
+    np.testing.assert_array_equal(errs0, np.mean((a - 1.0) ** 2, axis=1))
 
 
 def test_coded_combine_tree():
