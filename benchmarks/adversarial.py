@@ -25,6 +25,8 @@ def run(m: int = 6552, d: int = 6, vertex_transitive: bool = True
     A = expander_assignment(m, d, vertex_transitive=vertex_transitive,
                             seed=0)
     F = frc_assignment(m, d)
+    # lambda via the dispatching spectral path: matrix-free Lanczos at
+    # the n=2184 LPS scale instead of a dense eigendecomposition.
     lam = A.graph.spectral_expansion()
     # One batched decode per scheme across the whole attack grid.
     masks_g = np.stack([adversarial_mask(A, p) for p in P_GRID])

@@ -9,6 +9,12 @@ Schemes: ours+optimal, ours+fixed, expander-of-[6] (adjacency
 assignment; optimal decoding at m=24, fixed at m=6552 as in the paper),
 and the FRC optimum p^d/(1-p^d) plotted in closed form (the paper does
 the same).
+
+Each scheme's whole p-grid runs through ``sweep_error`` (shared
+uniforms, warm-started labels, matrix-free covariance norm at the LPS
+scale); per-point values are bit-identical to the historical
+``monte_carlo_error``-per-p loop, which ``sweep_report`` verifies and
+times for BENCH_sweep.json.
 """
 
 from __future__ import annotations
@@ -19,7 +25,8 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import (adjacency_assignment, decode, expander_assignment,
-                        monte_carlo_error, random_regular_graph, theory)
+                        monte_carlo_error, random_regular_graph, spectral,
+                        sweep_error, theory)
 
 P_GRID = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3)
 
@@ -28,21 +35,20 @@ def regime1(trials: int = 200, seed: int = 0) -> List[Dict]:
     A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
     adj = adjacency_assignment(random_regular_graph(24, 3, seed=2),
                                name="expander[6]")
+    opt = sweep_error(A, P_GRID, trials=trials, method="optimal",
+                      seed=seed)
+    fix = sweep_error(A, P_GRID, trials=trials, method="fixed", seed=seed)
+    exp6 = sweep_error(adj, P_GRID, trials=trials, method="optimal",
+                       seed=seed)
     rows = []
-    for p in P_GRID:
-        opt = monte_carlo_error(A, p, trials=trials, method="optimal",
-                                seed=seed)
-        fix = monte_carlo_error(A, p, trials=trials, method="fixed",
-                                seed=seed)
-        exp6 = monte_carlo_error(adj, p, trials=trials, method="optimal",
-                                 seed=seed)
+    for i, p in enumerate(P_GRID):
         rows.append({
             "regime": "m24_d3", "p": p,
-            "ours_optimal": opt["mean_error"],
-            "ours_optimal_cov": opt["cov_norm"],
-            "ours_fixed": fix["mean_error"],
-            "ours_fixed_cov": fix["cov_norm"],
-            "expander6_optimal": exp6["mean_error"],
+            "ours_optimal": opt[i]["mean_error"],
+            "ours_optimal_cov": opt[i]["cov_norm"],
+            "ours_fixed": fix[i]["mean_error"],
+            "ours_fixed_cov": fix[i]["cov_norm"],
+            "expander6_optimal": exp6[i]["mean_error"],
             "frc_optimal(theory)": theory.frc_random_error(p, 3),
             "lower_bound": theory.lower_bound_any_decoding(p, 3),
             "fixed_lower_bound": theory.lower_bound_fixed_decoding(p, 3),
@@ -52,18 +58,17 @@ def regime1(trials: int = 200, seed: int = 0) -> List[Dict]:
 
 def regime2(trials: int = 30, seed: int = 0) -> List[Dict]:
     A = expander_assignment(6552, 6, vertex_transitive=True, seed=0)
+    opt = sweep_error(A, P_GRID, trials=trials, method="optimal",
+                      seed=seed)
+    fix = sweep_error(A, P_GRID, trials=trials, method="fixed", seed=seed)
     rows = []
-    for p in P_GRID:
-        opt = monte_carlo_error(A, p, trials=trials, method="optimal",
-                                seed=seed)
-        fix = monte_carlo_error(A, p, trials=trials, method="fixed",
-                                seed=seed)
+    for i, p in enumerate(P_GRID):
         rows.append({
             "regime": "m6552_d6_LPS", "p": p,
-            "ours_optimal": opt["mean_error"],
-            "ours_optimal_cov": opt["cov_norm"],
-            "ours_fixed": fix["mean_error"],
-            "ours_fixed_cov": fix["cov_norm"],
+            "ours_optimal": opt[i]["mean_error"],
+            "ours_optimal_cov": opt[i]["cov_norm"],
+            "ours_fixed": fix[i]["mean_error"],
+            "ours_fixed_cov": fix[i]["cov_norm"],
             "frc_optimal(theory)": theory.frc_random_error(p, 6),
             "lower_bound": theory.lower_bound_any_decoding(p, 6),
             "fixed_lower_bound": theory.lower_bound_fixed_decoding(p, 6),
@@ -114,6 +119,111 @@ def speed_report(fast: bool = False) -> Dict:
         "note": ("scalar = per-mask optimal_decode_graph (the seed "
                  "monte_carlo path); batched = full monte_carlo_error "
                  "(sampling + batched decode + fused error), cov off"),
+    }
+
+
+def sweep_report() -> Dict:
+    """Grid-seconds + spectral-norm timings for BENCH_sweep.json.
+
+    Deliberately paper-scale in every mode (no ``fast`` knob): the
+    report's contract is the regime-2 grid at m=6552, and the whole
+    thing is ~25 s dominated by the historical per-point baseline it
+    exists to compare against.
+
+    Times the full regime-2 p-grid (6 p-points, cov on, trials=30, the
+    paper's m=6552 LPS scheme) two ways: the historical loop of
+    ``monte_carlo_error`` per p-point (dense n x n covariance SVD each)
+    vs one ``sweep_error`` pass (shared uniforms, warm-started labels,
+    matrix-free Lanczos covariance). Verifies the sweep acceptance
+    contract inline: mean/std bit-identical to the per-point loop,
+    covariance norms within 1e-6 relative of the dense SVD. Also times
+    the spectral primitives at the same scale (dense vs matrix-free
+    |Cov|_2; dense vs Lanczos lambda_2 of the LPS graph; the FFT
+    circulant spectrum the best-of-20 expander search now uses).
+    """
+    m, d, trials = 6552, 6, 30
+    A = expander_assignment(m, d, vertex_transitive=True, seed=0)
+    n = A.n
+
+    t0 = time.perf_counter()
+    per_point = [monte_carlo_error(A, p, trials=trials, method="optimal",
+                                   seed=0) for p in P_GRID]
+    loop_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rows = sweep_error(A, P_GRID, trials=trials, method="optimal", seed=0,
+                       cov_method="lanczos")
+    sweep_s = time.perf_counter() - t0
+
+    bit_identical = all(
+        r["mean_error"] == q["mean_error"] and
+        r["std_error"] == q["std_error"]
+        for r, q in zip(rows, per_point))
+    cov_rel = max(abs(r["cov_norm"] - q["cov_norm"]) /
+                  max(abs(q["cov_norm"]), 1e-30)
+                  for r, q in zip(rows, per_point))
+    # Acceptance contract, enforced (CI runs this via benchmarks.run):
+    # shared-uniform bit-identity and 1e-6-relative matrix-free cov.
+    # The 1e-6 bound is a float64 property: on TPU the Gram matvec runs
+    # the float32 Pallas kernel, so only a coarse sanity bound applies.
+    from repro.kernels.spectral_matvec import ops as _sm_ops
+
+    cov_tol = 5e-3 if _sm_ops.uses_pallas() else 1e-6
+    if not bit_identical:
+        raise AssertionError(
+            "sweep_error diverged from per-point monte_carlo_error: "
+            f"{rows} vs {per_point}")
+    if cov_rel > cov_tol:
+        raise AssertionError(
+            f"matrix-free cov norm off by {cov_rel:.3e} rel "
+            f"(> {cov_tol:g})")
+
+    # Spectral primitive timings at the same (trials, n) / n scales.
+    rng = np.random.default_rng(0)
+    ab = rng.normal(loc=1.0, scale=0.05, size=(trials, n))
+    t0 = time.perf_counter()
+    dense_norm = spectral.covariance_spectral_norm(ab, method="dense")
+    cov_dense_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lanczos_norm = spectral.covariance_spectral_norm(ab, method="lanczos")
+    cov_lanczos_s = time.perf_counter() - t0
+
+    g = A.graph
+    # graph_lambda2 is lru-cached; time the uncached implementation.
+    lam2_impl = spectral.graph_lambda2.__wrapped__
+    t0 = time.perf_counter()
+    lam2_dense = lam2_impl(g, "dense")
+    lam2_dense_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lam2_lanczos = lam2_impl(g, "lanczos")
+    lam2_lanczos_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    spectral.circulant_spectrum(n, tuple(range(1, d // 2 + 1)))
+    fft_s = time.perf_counter() - t0
+
+    return {
+        "regime2_grid": {
+            "m": m, "d": d, "n": n, "graph": "LPS X^{5,13}",
+            "p_grid": list(P_GRID), "trials": trials, "cov": True,
+            "per_point_seconds": loop_s,
+            "sweep_seconds": sweep_s,
+            "speedup": loop_s / sweep_s,
+            "bit_identical_mean_std": bit_identical,
+            "cov_norm_max_rel_diff": cov_rel,
+        },
+        "spectral": {
+            "cov_dense_svd_seconds": cov_dense_s,
+            "cov_lanczos_seconds": cov_lanczos_s,
+            "cov_rel_diff": abs(lanczos_norm - dense_norm) /
+            max(abs(dense_norm), 1e-30),
+            "lambda2_dense_seconds": lam2_dense_s,
+            "lambda2_lanczos_seconds": lam2_lanczos_s,
+            "lambda2_abs_diff": abs(lam2_lanczos - lam2_dense),
+            "circulant_fft_seconds": fft_s,
+        },
+        "note": ("per_point = historical monte_carlo_error loop (dense "
+                 "covariance SVD per p); sweep = sweep_error (shared "
+                 "uniforms, warm-started labels, matrix-free cov norm)"),
     }
 
 

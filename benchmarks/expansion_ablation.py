@@ -12,14 +12,16 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import (cycle_graph, graph_assignment, hypercube_graph,
-                        monte_carlo_error, random_regular_graph)
+                        random_regular_graph, sweep_error)
 from repro.core.graphs import lps_like_cayley_expander
 
 
 def run(p: float = 0.3, trials: int = 300,
         backend: str = "auto") -> List[Dict]:
     """``backend`` selects the batched decoding engine ('numpy'/'jax'/
-    'auto'); every graph's whole trial batch is decoded in one call."""
+    'auto'); every graph runs through one sweep-engine pass (a
+    single-point grid here), with lambda via the dispatching spectral
+    path (FFT for the cycle/circulant, dense for the small rest)."""
     cases = [
         ("cycle_n64_d2", cycle_graph(64)),
         ("hypercube_d4", hypercube_graph(4)),              # n=16, lam=2
@@ -31,8 +33,8 @@ def run(p: float = 0.3, trials: int = 300,
     rows = []
     for name, g in cases:
         A = graph_assignment(g, name=name)
-        mc = monte_carlo_error(A, p, trials=trials, method="optimal",
-                               backend=backend)
+        mc = sweep_error(A, (p,), trials=trials, method="optimal",
+                         backend=backend, cov=False)[0]
         rows.append({"graph": name, "n": g.n, "d": g.replication_factor,
                      "lambda": g.spectral_expansion(), "p": p,
                      "error": mc["mean_error"]})

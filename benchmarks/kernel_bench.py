@@ -19,6 +19,7 @@ from repro.kernels.batched_alpha import ref as ba_ref
 from repro.kernels.coded_combine import ref as cc_ref
 from repro.kernels.decode_attention import ref as da_ref
 from repro.kernels.rmsnorm import ref as rn_ref
+from repro.kernels.spectral_matvec import ref as sm_ref
 
 
 def _time(fn, *args, reps=20):
@@ -84,6 +85,16 @@ def main(fast: bool = False):
     us = _time(f, g, w)
     gb = g.size * 4 / 1e9
     rows.append(("coded_combine_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+
+    # Matrix-free spectral pipeline: tall-skinny Gram matvec oracle at
+    # the transposed LPS covariance orientation (n=2184 rows, 30 cols).
+    R, k = (2184, 30) if fast else (8736, 64)
+    x = rng.normal(size=(R, k))
+    v = rng.normal(size=k)
+    us = _time(sm_ref.gram_matvec, x, v, reps=50)
+    gb = 2 * x.size * 8 / 1e9  # x streamed twice per matvec
+    rows.append(("spectral_matvec_gram_ref", us,
+                 f"{gb / (us / 1e6):.1f}GB/s"))
 
     rows.extend(batched_alpha_rows(fast=fast))
 

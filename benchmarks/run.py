@@ -2,10 +2,20 @@
 
 ``python -m benchmarks.run [--fast|--full]`` -- fast mode by default so
 the whole suite stays in CPU-minutes; --full uses the paper-scale
-settings (m=6552 LPS regime etc.). Every run also emits
-``BENCH_decoding.json``: machine-readable trials/sec for the scalar vs
-batched straggler-decoding paths plus the batched_alpha kernel rows, so
-the decoding perf trajectory is trackable across PRs.
+settings (m=6552 LPS regime etc.). Every run also emits two
+machine-readable perf reports (whenever ``decoding_error`` is in the
+selected suites):
+
+* ``BENCH_decoding.json`` -- trials/sec for the scalar vs batched
+  straggler-decoding paths plus the batched_alpha kernel rows.
+* ``BENCH_sweep.json`` -- grid-seconds for the full regime-2 p-grid
+  (6 p-points, cov on, trials=30 at m=6552): the historical per-p
+  ``monte_carlo_error`` loop vs the ``sweep_error`` engine, with the
+  bit-identity / 1e-6-cov acceptance checks inline, plus
+  spectral-norm timings (dense covariance SVD vs matrix-free Lanczos,
+  dense vs Lanczos graph lambda_2, FFT circulant spectrum).
+
+Both keep the perf trajectory trackable across PRs.
 """
 
 from __future__ import annotations
@@ -26,6 +36,8 @@ def main() -> None:
                          "adversarial,bounds,kernels,roofline")
     ap.add_argument("--bench-json", default="BENCH_decoding.json",
                     help="where to write the decoding perf report")
+    ap.add_argument("--sweep-json", default="BENCH_sweep.json",
+                    help="where to write the grid-sweep perf report")
     args = ap.parse_args()
     if args.full and args.fast:
         ap.error("--fast and --full are mutually exclusive")
@@ -75,6 +87,19 @@ def main() -> None:
           f"scalar {report['scalar']['trials_per_sec']:.1f} trials/s, "
           f"batched {report['batched']['trials_per_sec']:.1f} trials/s "
           f"({report['speedup']:.1f}x)")
+
+    print("\n=== grid-sweep perf report ===")
+    sys.stdout.flush()
+    sweep = decoding_error.sweep_report()  # paper-scale by contract
+    sweep["mode"] = "fast" if fast else "full"
+    with open(args.sweep_json, "w") as f:
+        json.dump(sweep, f, indent=2)
+    grid = sweep["regime2_grid"]
+    print(f"wrote {args.sweep_json}: regime-2 grid "
+          f"{grid['per_point_seconds']:.1f}s per-point vs "
+          f"{grid['sweep_seconds']:.2f}s sweep ({grid['speedup']:.1f}x), "
+          f"bit_identical={grid['bit_identical_mean_std']}, "
+          f"cov_rel={grid['cov_norm_max_rel_diff']:.2e}")
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 
 

@@ -7,6 +7,10 @@ Public surface of the paper's core contribution:
 - decoding:    O(m) optimal graph decoder, pseudoinverse, fixed
 - batched_decoding: the (trials, m)-at-once alpha* engine (pointer
                jumping on the double cover; numpy + jittable jax paths)
+- sweep:       the (p_grid x trials) grid engine (shared uniforms,
+               warm-started labels, one decode pipeline per scheme)
+- spectral:    matrix-free spectra (Lanczos covariance norm, FFT
+               circulant eigenvalues, sparse-matvec graph lambda_2)
 - stragglers:  Bernoulli / fixed-count / Markov / adversarial attacks
 - theory:      the paper's closed-form bounds
 - debias:      Prop B.1 black-box debiasing
@@ -26,6 +30,10 @@ from .decoding import (DecodeResult, decode, optimal_alpha_graph,
 from .batched_decoding import (batched_alpha, batched_fixed_alpha,
                                batched_frc_alpha,
                                batched_optimal_alpha_graph)
+from .sweep import bernoulli_uniforms, decode_grid, sweep_error
+from . import spectral
+from .spectral import (circulant_spectrum, covariance_spectral_norm,
+                       graph_lambda2, lanczos_lambda_max)
 from .stragglers import (StragglerModel, BernoulliStragglers,
                          FixedCountStragglers, MarkovStragglers,
                          adversarial_mask, adversarial_mask_graph,
@@ -47,6 +55,9 @@ __all__ = [
     "normalized_error", "monte_carlo_error", "debias_alpha",
     "batched_alpha", "batched_fixed_alpha", "batched_frc_alpha",
     "batched_optimal_alpha_graph",
+    "bernoulli_uniforms", "decode_grid", "sweep_error",
+    "spectral", "circulant_spectrum", "covariance_spectral_norm",
+    "graph_lambda2", "lanczos_lambda_max",
     "StragglerModel", "BernoulliStragglers", "FixedCountStragglers",
     "MarkovStragglers", "adversarial_mask", "adversarial_mask_graph",
     "adversarial_mask_frc",

@@ -18,6 +18,7 @@ every normalized error metric unchanged -- see paper Section II).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import numpy as np
@@ -27,11 +28,19 @@ from .graphs import Graph, make_expander
 
 @dataclasses.dataclass(frozen=True)
 class Assignment:
-    """A block-level assignment matrix with scheme metadata."""
+    """A block-level assignment matrix with scheme metadata.
+
+    ``machines`` records what a carried graph's machines *are*:
+    'edges' for Def II.2 schemes (the O(m) component decoders apply),
+    'vertices' for adjacency schemes (pseudoinverse decoding). An
+    explicit marker rather than a shape heuristic -- for 2-regular
+    graphs m == n and the shapes are indistinguishable.
+    """
 
     A: np.ndarray  # (n_blocks, m_machines)
     name: str
     graph: Optional[Graph] = None
+    machines: Optional[str] = None  # 'edges' | 'vertices' | None
 
     @property
     def n(self) -> int:
@@ -63,19 +72,28 @@ def graph_assignment(graph: Graph, name: str = "graph") -> Assignment:
     for j, (u, v) in enumerate(graph.edges):
         A[u, j] = 1.0
         A[v, j] = 1.0
-    return Assignment(A=A, name=name, graph=graph)
+    return Assignment(A=A, name=name, graph=graph, machines="edges")
 
 
+@functools.lru_cache(maxsize=8)  # the m=6552 A is ~114 MB; keep few
 def expander_assignment(m: int, d: int, *, vertex_transitive: bool = True,
                         seed: int = 0) -> Assignment:
-    """The paper's scheme: d-regular expander on n = 2m/d vertices."""
+    """The paper's scheme: d-regular expander on n = 2m/d vertices.
+
+    Cached per process, so benchmark modules sharing the paper-scale
+    scheme pay graph construction and the O(n*m) matrix build once per
+    run. The cached A is frozen read-only: an in-place mutation by one
+    caller would otherwise silently corrupt every later one.
+    """
     if (2 * m) % d != 0:
         raise ValueError("need d | 2m")
     n = 2 * m // d
     g = make_expander(n, d, vertex_transitive=vertex_transitive, seed=seed)
     if g.m != m:
         raise RuntimeError(f"graph has {g.m} edges, wanted {m}")
-    return graph_assignment(g, name=f"expander(d={d})")
+    assignment = graph_assignment(g, name=f"expander(d={d})")
+    assignment.A.setflags(write=False)
+    return assignment
 
 
 def frc_assignment(m: int, d: int) -> Assignment:
@@ -95,7 +113,7 @@ def adjacency_assignment(graph: Graph, name: str = "adjacency") -> Assignment:
     """Expander code of [6]: n blocks = n machines = vertices of G;
     machine j holds the blocks of its neighbours (A = Adj(G))."""
     return Assignment(A=graph.adjacency().astype(np.float64), name=name,
-                      graph=graph)
+                      graph=graph, machines="vertices")
 
 
 def bernoulli_assignment(n: int, m: int, d: int, seed: int = 0) -> Assignment:

@@ -119,7 +119,27 @@ def _cover_dense(graph: Graph):
 # ---------------------------------------------------------------------------
 
 
-def _propagate_numpy(graph: Graph, alive: np.ndarray) -> np.ndarray:
+def _label_dtype(n: int):
+    """int16 labels when every node id -- and the jax backend's 2n
+    sentinel -- fits (2n is even, so 2n < 32768 iff 2n <= 32766 fits
+    int16); halves the gather traffic of the memory-bound relax step.
+    Shared by both backends so warm-start labels round-trip losslessly.
+    """
+    return np.int16 if 2 * n < 32768 else np.int32
+
+
+def _check_labels0(labels0, trials: int, n: int) -> np.ndarray:
+    """Validate warm-start labels (see ``batched_optimal_alpha_graph``:
+    only sound when the masks are supersets of the labels' masks)."""
+    labels0 = np.asarray(labels0)
+    if labels0.shape != (trials, 2 * n):
+        raise ValueError(f"labels0 must be ({trials}, {2 * n}), "
+                         f"got {labels0.shape}")
+    return labels0.astype(_label_dtype(n), copy=False)
+
+
+def _propagate_numpy(graph: Graph, alive: np.ndarray,
+                     labels0: np.ndarray | None = None) -> np.ndarray:
     n = graph.n
     trials = alive.shape[0]
     pad_nbr, pad_edge = _cover_dense(graph)
@@ -131,7 +151,11 @@ def _propagate_numpy(graph: Graph, alive: np.ndarray) -> np.ndarray:
     self_idx = np.arange(2 * n, dtype=np.int32)[:, None]
     nbr_eff = np.where(alive_ext[:, pad_edge], pad_nbr[None],
                        self_idx[None]).reshape(trials, 2 * n * deg_max)
-    labels = np.tile(np.arange(2 * n, dtype=np.int32), (trials, 1))
+    ldt = _label_dtype(n)
+    if labels0 is None:
+        labels = np.tile(np.arange(2 * n, dtype=ldt), (trials, 1))
+    else:
+        labels = _check_labels0(labels0, trials, n)
     while True:
         vals = np.take_along_axis(labels, nbr_eff, axis=1)
         new = np.minimum(labels,
@@ -148,30 +172,30 @@ def _propagate_numpy(graph: Graph, alive: np.ndarray) -> np.ndarray:
 
 @functools.lru_cache(maxsize=64)  # bounded: jitted fns hold XLA executables
 def _jax_propagator(graph: Graph):
-    """Jitted alive (T, m) bool -> labels (T, 2n) int32 for one graph.
+    """Jitted propagators for one graph: (run_cold, run_warm).
 
-    Uses a *static* shared gather index (each trial's label row fits in
+    ``run_cold(alive)`` seeds labels with node identity on device;
+    ``run_warm(alive, labels0)`` takes a (T, 2n) warm-start seed. Both
+    use a *static* shared gather index (each trial's label row fits in
     cache, and XLA folds index computation away) plus a precomputed
     liveness mask, which benches ~4x faster than per-trial effective
-    neighbour indices on CPU.
+    neighbour indices on CPU. The fixed point -- per-component label
+    minima -- is independent of the seed, so warm and cold starts agree
+    bit-for-bit and one compile per entry serves a whole p-sweep.
     """
     n = graph.n
     pad_nbr_np, pad_edge_np = _cover_dense(graph)
     deg_max = pad_nbr_np.shape[1]
     nbr_flat = jnp.asarray(pad_nbr_np.ravel())    # (2n*deg,) static
     edge_flat = jnp.asarray(pad_edge_np.ravel())
-    # Labels are node ids < 2n + 1, so int16 fits most graphs and halves
-    # the gather traffic of the memory-bound relax step.
-    ldt = jnp.int16 if 2 * n < 2 ** 15 - 1 else jnp.int32
+    ldt = jnp.dtype(_label_dtype(n))
     big = jnp.asarray(2 * n, ldt)
 
-    @jax.jit
-    def run(alive):
+    def propagate(alive, labels0):
         trials = alive.shape[0]
         alive_ext = jnp.concatenate(
             [alive, jnp.zeros((trials, 1), dtype=bool)], axis=1)
         pad_alive = alive_ext[:, edge_flat]       # (T, 2n*deg)
-        labels0 = jnp.tile(jnp.arange(2 * n, dtype=ldt), (trials, 1))
 
         def cond(carry):
             return carry[1]
@@ -185,10 +209,20 @@ def _jax_propagator(graph: Graph):
                 new = jnp.take_along_axis(new, new, axis=1)
             return new, jnp.any(new != labels)
 
-        labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+        labels, _ = jax.lax.while_loop(
+            cond, body, (labels0.astype(ldt), jnp.bool_(True)))
         return labels
 
-    return run
+    @jax.jit
+    def run_cold(alive):
+        # Identity seed built on device: the common (non-sweep) case
+        # ships no labels array from the host.
+        labels0 = jnp.tile(jnp.arange(2 * n, dtype=ldt),
+                           (alive.shape[0], 1))
+        return propagate(alive, labels0)
+
+    run_warm = jax.jit(propagate)
+    return run_cold, run_warm
 
 
 def _alpha_from_labels(labels: np.ndarray, n: int) -> np.ndarray:
@@ -220,6 +254,17 @@ def _alpha_from_labels(labels: np.ndarray, n: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def is_graph_scheme(assignment: Assignment) -> bool:
+    """True for Def II.2 schemes (machines = edges of the carried
+    graph): the schemes the O(m) component decoders serve. Single
+    dispatch predicate shared by the scalar, batched and sweep paths.
+    Keyed on the explicit ``machines`` marker, not the A shape --
+    adjacency assignments also carry a graph, and for 2-regular graphs
+    their n x n shape is indistinguishable from (n, m); they must fall
+    through to the pseudoinverse."""
+    return assignment.graph is not None and assignment.machines == "edges"
+
+
 def _check_masks(alive, m: int) -> np.ndarray:
     alive = np.asarray(alive, dtype=bool)
     if alive.ndim != 2:
@@ -230,17 +275,30 @@ def _check_masks(alive, m: int) -> np.ndarray:
 
 
 def batched_optimal_alpha_graph(graph: Graph, alive, *,
-                                backend: str = "auto") -> np.ndarray:
+                                backend: str = "auto", labels0=None,
+                                return_labels: bool = False):
     """alpha* (trials, n) for a (trials, m) batch of masks over one graph.
 
     backend: 'numpy' | 'jax' | 'auto' (jax for large batches when
     available; the first jax call per (graph, trials) shape pays a jit
     compile).
+
+    ``labels0`` warm-starts the label propagation with the (trials, 2n)
+    cover labels of a *previous* decode whose masks were subsets of
+    ``alive`` (per trial) -- the sweep engine's nested-in-p protocol.
+    Any seed satisfying that containment leaves the fixed point (and
+    hence alpha) bit-identical to a cold start; it only cuts rounds.
+    ``return_labels=True`` additionally returns the fixed-point labels
+    so the caller can seed the next grid point.
     """
     alive = _check_masks(alive, graph.m)
     trials = alive.shape[0]
+    n = graph.n
     if trials == 0:
-        return np.zeros((0, graph.n), dtype=np.float64)
+        out = np.zeros((0, n), dtype=np.float64)
+        if return_labels:
+            return out, np.zeros((0, 2 * n), dtype=_label_dtype(n))
+        return out
     if backend == "auto":
         backend = ("jax" if _HAS_JAX and alive.size >= _JAX_MIN_WORK
                    else "numpy")
@@ -248,18 +306,33 @@ def batched_optimal_alpha_graph(graph: Graph, alive, *,
         raise RuntimeError("jax backend requested but jax is missing")
     if backend not in ("jax", "numpy"):
         raise ValueError(f"unknown backend {backend!r}")
+    if labels0 is not None:
+        labels0 = _check_labels0(labels0, trials, n)
     # Chunk the batch so the (T, 2n, deg_max) gather stays in-cache-ish
     # and bounded in memory (~200 MB of int32 per intermediate).
     deg_max = _cover_dense(graph)[0].shape[1]
-    chunk = max(1, int(5e7) // max(2 * graph.n * deg_max, 1))
-    out = np.empty((trials, graph.n), dtype=np.float64)
+    chunk = max(1, int(5e7) // max(2 * n * deg_max, 1))
+    ldt = _label_dtype(n)
+    out = np.empty((trials, n), dtype=np.float64)
+    out_labels = (np.empty((trials, 2 * n), dtype=ldt)
+                  if return_labels else None)
     for lo in range(0, trials, chunk):
         part = alive[lo:lo + chunk]
+        part_l0 = None if labels0 is None else labels0[lo:lo + chunk]
         if backend == "jax":
-            labels = np.asarray(_jax_propagator(graph)(jnp.asarray(part)))
+            run_cold, run_warm = _jax_propagator(graph)
+            if part_l0 is None:
+                labels = np.asarray(run_cold(jnp.asarray(part)))
+            else:
+                labels = np.asarray(run_warm(jnp.asarray(part),
+                                             jnp.asarray(part_l0)))
         else:
-            labels = _propagate_numpy(graph, part)
-        out[lo:lo + chunk] = _alpha_from_labels(labels, graph.n)
+            labels = _propagate_numpy(graph, part, part_l0)
+        out[lo:lo + chunk] = _alpha_from_labels(labels, n)
+        if out_labels is not None:
+            out_labels[lo:lo + chunk] = labels
+    if return_labels:
+        return out, out_labels
     return out
 
 
@@ -303,9 +376,9 @@ def batched_alpha(assignment: Assignment, alive, *,
         return batched_fixed_alpha(assignment, alive, p)
     if method != "optimal":
         raise ValueError(f"unknown method {method!r}")
-    g = assignment.graph
-    if g is not None and assignment.A.shape == (g.n, g.m):
-        return batched_optimal_alpha_graph(g, alive, backend=backend)
+    if is_graph_scheme(assignment):
+        return batched_optimal_alpha_graph(assignment.graph, alive,
+                                           backend=backend)
     if assignment.name.startswith("frc"):
         return batched_frc_alpha(assignment, alive)
     from .decoding import optimal_decode_pinv  # lazy: avoids import cycle

@@ -30,7 +30,7 @@ import numpy as np
 
 from ..kernels.batched_alpha import ops as _ba_ops
 from .assignment import Assignment
-from .batched_decoding import batched_alpha, fixed_w
+from .batched_decoding import batched_alpha, fixed_w, is_graph_scheme
 from .graphs import Graph
 
 
@@ -273,12 +273,9 @@ def decode(assignment: Assignment, alive: np.ndarray, *,
         return fixed_decode(assignment, alive, p)
     if method != "optimal":
         raise ValueError(f"unknown method {method!r}")
-    g = assignment.graph
-    if g is not None and assignment.A.shape == (g.n, g.m):
+    if is_graph_scheme(assignment):
         # Def II.2 scheme (machines = edges): O(m) component decoder.
-        # (Adjacency assignments also carry a graph but machines are
-        # vertices there; they fall through to the pseudoinverse.)
-        return optimal_decode_graph(g, alive)
+        return optimal_decode_graph(assignment.graph, alive)
     if assignment.name.startswith("frc"):
         return optimal_decode_frc(assignment, alive)
     return optimal_decode_pinv(assignment, alive)
@@ -303,30 +300,25 @@ def debias_alpha(alphas: np.ndarray) -> np.ndarray:
 def monte_carlo_error(assignment: Assignment, p: float, *, trials: int,
                       method: str = "optimal", seed: int = 0,
                       debias: bool = True, backend: str = "auto",
-                      cov: bool = True) -> dict:
+                      cov: bool = True,
+                      cov_method: str = "dense") -> dict:
     """Estimate E[(1/n)|alpha-bar - 1|^2] and |Cov(alpha-bar)|_2 under
     Bernoulli(p) stragglers (Figure 3 harness).
 
-    All masks are sampled up front (the same RNG stream the historical
-    per-trial loop consumed, so results are reproducible across the
-    rewrite) and decoded in one call to the batched engine; the debias
-    rescale and per-trial error reduction run through the fused
-    ``batched_alpha`` kernel (Pallas on TPU, float64 oracle on CPU).
-    ``cov=False`` skips the O(n^2)-memory covariance/spectral-norm step
-    for throughput benchmarks.
+    A single-point view of the grid engine: delegates to
+    ``sweep.sweep_error`` with a one-element grid, which keeps this
+    bit-identical to the historical per-trial loop (same RNG stream,
+    same batched decode, same fused error kernel) *and* to multi-point
+    sweeps under the shared-uniform protocol. ``cov=False`` skips the
+    covariance/spectral-norm step for throughput benchmarks;
+    ``cov_method`` defaults to the historical dense SVD -- pass
+    'lanczos' (or 'auto') for the matrix-free O(trials * n * iters)
+    path at large n (see ``core.spectral``).
     """
-    rng = np.random.default_rng(seed)
-    masks = rng.random((trials, assignment.m)) >= p
-    alphas = batched_alpha(assignment, masks, method=method, p=p,
-                           backend=backend)
-    errs, scale = _ba_ops.fused_error(alphas, debias=debias)
-    out = {
-        "mean_error": float(errs.mean()),
-        "std_error": float(errs.std()),
-    }
-    if cov:
-        ab = alphas * scale
-        centered = ab - ab.mean(axis=0, keepdims=True)
-        cov_mat = centered.T @ centered / trials
-        out["cov_norm"] = float(np.linalg.norm(cov_mat, 2))
-    return out
+    from .sweep import sweep_error  # local: decoding is imported early
+
+    row = sweep_error(assignment, (p,), trials=trials, method=method,
+                      seed=seed, debias=debias, backend=backend, cov=cov,
+                      cov_method=cov_method)[0]
+    del row["p"]
+    return row

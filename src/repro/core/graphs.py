@@ -12,7 +12,9 @@ assignment matrix and the O(m) decoder can index edges consistently.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+import functools
+import math
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -21,10 +23,19 @@ Edge = Tuple[int, int]
 
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """An undirected multigraph with a fixed edge ordering."""
+    """An undirected multigraph with a fixed edge ordering.
+
+    ``circulant_offsets`` is derived metadata (the canonical half
+    connection set of a circulant/Cayley graph of Z_n) that unlocks the
+    exact FFT eigenvalue path in ``core.spectral``; it is excluded from
+    eq/hash so graphs with identical edge lists share cache entries
+    regardless of how they were constructed.
+    """
 
     n: int
     edges: Tuple[Edge, ...]
+    circulant_offsets: Optional[Tuple[int, ...]] = dataclasses.field(
+        default=None, compare=False)
 
     @property
     def m(self) -> int:
@@ -49,16 +60,21 @@ class Graph:
             adj[v, u] += 1.0
         return adj
 
-    def spectral_expansion(self) -> float:
+    def spectral_expansion(self, method: str = "auto") -> float:
         """lambda = d - lambda_2 for a d-regular graph.
 
         For irregular graphs, returns max-degree minus the second
         adjacency eigenvalue, which is what the expander mixing lemma
         uses up to regularity slack.
+
+        ``method`` dispatches the lambda_2 computation ('auto' |
+        'dense' | 'fft' | 'lanczos'): exact FFT for circulant graphs,
+        dense eigvalsh for small n, matrix-free Lanczos for large
+        regular graphs. See ``core.spectral.graph_lambda2``.
         """
-        eigs = np.sort(np.linalg.eigvalsh(self.adjacency()))[::-1]
-        d = float(np.max(self.degrees()))
-        return d - float(eigs[1])
+        from .spectral import spectral_expansion as _spectral_expansion
+
+        return _spectral_expansion(self, method=method)
 
     def is_regular(self) -> bool:
         deg = self.degrees()
@@ -99,11 +115,23 @@ def _num_components(n: int, edges: Sequence[Edge]) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _canonical_offsets(n: int, offsets: Sequence[int]) -> Tuple[int, ...]:
+    """Canonical half connection set {min(o, n-o)} of a Z_n Cayley graph,
+    deduplicated exactly as ``circulant_graph`` dedups edges."""
+    half = set()
+    for o in offsets:
+        o = o % n
+        if o:
+            half.add(min(o, n - o))
+    return tuple(sorted(half))
+
+
 def cycle_graph(n: int) -> Graph:
     """2-regular cycle: the weakest vertex-transitive expander (d=2)."""
     if n < 3:
         raise ValueError("cycle needs n >= 3")
-    return Graph(n, tuple((i, (i + 1) % n) for i in range(n)))
+    return Graph(n, tuple((i, (i + 1) % n) for i in range(n)),
+                 circulant_offsets=(1,))
 
 
 def complete_graph(n: int) -> Graph:
@@ -186,16 +214,14 @@ def circulant_graph(n: int, offsets: Sequence[int]) -> Graph:
     for i in range(n):
         for o in offsets:
             o = o % n
-            if o == 0 or 2 * o == n and (i > (i + o) % n):
-                # o == n/2 gives each edge twice; keep one copy.
-                pass
             j = (i + o) % n
             key = (min(i, j), max(i, j))
             if i == j or key in seen:
                 continue
             seen.add(key)
             edges.append(key)
-    return Graph(n, tuple(edges))
+    return Graph(n, tuple(edges),
+                 circulant_offsets=_canonical_offsets(n, offsets))
 
 
 def hypercube_graph(k: int) -> Graph:
@@ -242,7 +268,10 @@ def paley_graph(q: int) -> Graph:
         for j in range(i + 1, q):
             if (j - i) % q in squares:
                 edges.append((i, j))
-    return Graph(q, tuple(edges))
+    # q = 1 mod 4 makes -1 a square, so the connection set is symmetric
+    # and the Paley graph is the circulant with the square offsets.
+    return Graph(q, tuple(edges),
+                 circulant_offsets=_canonical_offsets(q, sorted(squares)))
 
 
 def lps_like_cayley_expander(n: int, d: int, seed: int = 0) -> Graph:
@@ -258,24 +287,28 @@ def lps_like_cayley_expander(n: int, d: int, seed: int = 0) -> Graph:
     """
     if d % 2 != 0 and n % 2 != 0:
         raise ValueError("circulant d-regular needs even d or even n")
+    from .spectral import circulant_spectrum
+
     rng = np.random.default_rng(seed)
     k = d // 2
-    best: Graph | None = None
+    best_offs: Optional[List[int]] = None
     best_lam = -np.inf
     for _ in range(20):
         offs = rng.choice(np.arange(1, n // 2), size=k, replace=False)
         offs = list(int(o) for o in offs)
         if d % 2 == 1:
             offs.append(n // 2)
-        g = circulant_graph(n, offs)
-        if g.m != n * d // 2 or not g.is_connected():
+        # Degree d is automatic (distinct offsets < n/2, plus n/2 once);
+        # the circulant is connected iff the offsets generate Z_n, and
+        # its full spectrum is one FFT -- no graph build, no eigvalsh.
+        if functools.reduce(math.gcd, offs, n) != 1:
             continue
-        lam = g.spectral_expansion()
+        lam = d - float(np.sort(circulant_spectrum(n, offs))[-2])
         if lam > best_lam:
-            best, best_lam = g, lam
-    if best is None:
+            best_offs, best_lam = offs, lam
+    if best_offs is None:
         raise RuntimeError("no valid circulant found")
-    return best
+    return circulant_graph(n, best_offs)
 
 
 def _sqrt_mod(a: int, q: int) -> Optional[int]:
@@ -371,6 +404,7 @@ def lps_graph(p: int, q: int) -> Graph:
     return Graph(n, tuple(sorted(edge_set)))
 
 
+@functools.lru_cache(maxsize=32)  # process-level: LPS BFS etc. run once
 def make_expander(n: int, d: int, *, vertex_transitive: bool = True,
                   seed: int = 0) -> Graph:
     """Main entry point: a d-regular expander on n vertices.
@@ -380,6 +414,9 @@ def make_expander(n: int, d: int, *, vertex_transitive: bool = True,
     hypercube, or a best-of-20 random circulant (adequate for the small
     n used by the distributed runtime; NOT a good expander for large n
     at constant d -- use LPS sizes there, as the paper does).
+
+    Cached per process (graphs are immutable), so every benchmark
+    module sharing e.g. the m=6552 LPS scheme pays construction once.
     """
     if d >= n - 1:
         return complete_graph(n)

@@ -1,0 +1,262 @@
+"""Matrix-free spectral toolkit for the sweep engine and graph schemes.
+
+Two spectral quantities gate the paper's harnesses at scale:
+
+* ``|Cov(alpha-bar)|_2`` in the Figure 3 / Section VIII-B Monte-Carlo
+  pipeline. The historical path formed the dense n x n covariance and
+  ran a full SVD -- O(n^3) per p-point, ~3.5 s at the LPS n=2184 scale.
+  ``covariance_spectral_norm`` instead runs Lanczos iteration directly
+  on the centered (trials, n) batch: the covariance top eigenvalue is
+  sigma_max(C)^2 / trials, reachable through Gram matvecs
+  v -> X^T (X v) with X the tall-skinny orientation of C, i.e.
+  O(trials * n * iters) and no n x n matrix ever formed. The matvec is
+  the ``kernels.spectral_matvec`` package (Pallas on TPU, float64
+  NumPy oracle on CPU). When the Krylov dimension min(trials, n) is
+  small (the paper's trials=30 regime) Lanczos exhausts the space and
+  the result is exact to rounding.
+
+* ``lambda_2(Adj(G))`` behind ``Graph.spectral_expansion`` -- the
+  quantity Thm IV.1 / Cor V.2 and the related expander schemes (Raviv
+  et al., Charles et al.) all scale with. ``graph_lambda2`` dispatches:
+  circulant graphs (cycles, Paley, the ``lps_like_cayley_expander``
+  candidates) get their *exact* spectrum from one FFT of the offset
+  indicator; large regular graphs get sparse-matvec Lanczos with the
+  known top eigenvector (the all-ones direction) deflated; small or
+  irregular graphs keep the dense eigvalsh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, TYPE_CHECKING
+
+import numpy as np
+
+from ..kernels.spectral_matvec import ops as _sm_ops
+
+if TYPE_CHECKING:  # avoid a runtime cycle with .graphs
+    from .graphs import Graph
+
+# Below these sizes the dense path is both exact and cheap; Lanczos
+# only pays off once the O(n^3) eigendecomposition dominates.
+_DENSE_N_MAX = 512
+_DENSE_COV_MAX = 512
+
+
+# ---------------------------------------------------------------------------
+# Lanczos extreme eigenvalue (full reorthogonalization)
+# ---------------------------------------------------------------------------
+
+
+def lanczos_lambda_max(matvec: Callable[[np.ndarray], np.ndarray],
+                       dim: int, *, maxiter: int | None = None,
+                       tol: float = 1e-12, seed: int = 0) -> float:
+    """Largest eigenvalue of a symmetric operator given only matvecs.
+
+    Full reorthogonalization (the Krylov bases here are tiny relative
+    to the matvec cost), with restart on breakdown so invariant
+    subspaces are enumerated rather than silently truncated: when
+    ``maxiter`` covers the whole space the result is therefore exact to
+    rounding, which is what the covariance-norm acceptance (1e-6
+    relative of the dense SVD) and the closed-form graph tests rely on.
+    Stops early once the top Ritz value is stable to ``tol`` (relative)
+    for two consecutive iterations.
+    """
+    if dim <= 0:
+        return 0.0
+    rng = np.random.default_rng(seed)
+    kmax = dim if maxiter is None else max(1, min(maxiter, dim))
+    # Grow the basis geometrically: convergence usually takes a few
+    # dozen iterations, so never preallocate the O(dim^2) worst case.
+    Q = np.empty((min(kmax, 32), dim), dtype=np.float64)
+
+    def ensure_row(i: int) -> None:
+        nonlocal Q
+        if i >= Q.shape[0]:
+            Q = np.concatenate(
+                [Q, np.empty((min(kmax, 2 * Q.shape[0]) - Q.shape[0],
+                              dim))], axis=0)
+
+    diag: list[float] = []
+    off: list[float] = []
+    q = rng.standard_normal(dim)
+    q /= np.linalg.norm(q)
+    Q[0] = q
+    theta_prev = None
+    stable = 0
+    k = 0
+    while True:
+        w = np.asarray(matvec(Q[k]), dtype=np.float64)
+        diag.append(float(Q[k] @ w))
+        # Classical Gram-Schmidt against the whole basis, twice (the
+        # standard "twice is enough" full reorthogonalization).
+        w -= Q[:k + 1].T @ (Q[:k + 1] @ w)
+        w -= Q[:k + 1].T @ (Q[:k + 1] @ w)
+        b = float(np.linalg.norm(w))
+        k += 1
+        T = np.diag(diag)
+        if off:
+            idx = np.arange(len(off))
+            T[idx, idx + 1] = off
+            T[idx + 1, idx] = off
+        theta = float(np.linalg.eigvalsh(T)[-1])
+        if theta_prev is not None and \
+                abs(theta - theta_prev) <= tol * max(1.0, abs(theta)):
+            stable += 1
+            if stable >= 2:
+                return theta
+        else:
+            stable = 0
+        theta_prev = theta
+        if k == kmax:
+            return theta
+        ensure_row(k)
+        if b <= 1e-13 * max(1.0, abs(diag[-1])):
+            # Invariant subspace found: restart in its orthogonal
+            # complement (off-diagonal 0 keeps T block-tridiagonal).
+            q = rng.standard_normal(dim)
+            q -= Q[:k].T @ (Q[:k] @ q)
+            nq = float(np.linalg.norm(q))
+            if nq < 1e-10:  # basis exhausted: theta is exact
+                return theta
+            off.append(0.0)
+            Q[k] = q / nq
+        else:
+            off.append(b)
+            Q[k] = w / b
+
+
+# ---------------------------------------------------------------------------
+# Covariance spectral norm (matrix-free)
+# ---------------------------------------------------------------------------
+
+
+def covariance_spectral_norm(batch: np.ndarray, *, method: str = "auto",
+                             maxiter: int | None = None,
+                             tol: float = 1e-12, seed: int = 0) -> float:
+    """|Cov(rows of batch)|_2 for a (trials, n) batch.
+
+    method 'dense' reproduces the historical expression bit-for-bit
+    (center, form C^T C / trials, dense 2-norm); 'lanczos' never forms
+    the n x n matrix: it runs ``lanczos_lambda_max`` on the Gram
+    operator of the tall-skinny orientation of the centered batch
+    (dimension min(trials, n)), dividing by trials. 'auto' picks
+    lanczos once n outgrows the dense crossover.
+    """
+    a = np.asarray(batch, dtype=np.float64)
+    if a.ndim != 2:
+        raise ValueError(f"batch must be (trials, n), got {a.shape}")
+    trials, n = a.shape
+    if trials == 0:
+        return 0.0
+    if method == "auto":
+        method = "lanczos" if n > _DENSE_COV_MAX else "dense"
+    centered = a - a.mean(axis=0, keepdims=True)
+    if method == "dense":
+        cov = centered.T @ centered / trials
+        return float(np.linalg.norm(cov, 2))
+    if method != "lanczos":
+        raise ValueError(f"unknown cov method {method!r}")
+    # Operate on the small side: X^T X is (k, k) with k = min(trials, n)
+    # and shares its nonzero spectrum with the covariance * trials.
+    # Stage the tall operand once (a device upload on the TPU path)
+    # rather than per Lanczos matvec.
+    X = _sm_ops.prepare_operand(centered if trials >= n else centered.T)
+    k = X.shape[1]
+
+    def mv(v: np.ndarray) -> np.ndarray:
+        return _sm_ops.gram_matvec(X, v) / trials
+
+    lam = lanczos_lambda_max(mv, k, maxiter=maxiter, tol=tol, seed=seed)
+    return float(max(lam, 0.0))  # Gram operator is PSD; clip rounding
+
+
+# ---------------------------------------------------------------------------
+# Graph spectra
+# ---------------------------------------------------------------------------
+
+
+def circulant_spectrum(n: int, offsets: Sequence[int]) -> np.ndarray:
+    """Exact adjacency spectrum of the circulant graph of Z_n with
+    connection set {+-o : o in offsets} \\ {0} (deduplicated like
+    ``graphs.circulant_graph``): lambda_k = sum_{s in S} e^{2 pi i ks/n}
+    -- i.e. one FFT of the connection-set indicator. Returns the n
+    eigenvalues in frequency order (index 0 is the degree)."""
+    from .graphs import _canonical_offsets  # single dedup convention
+
+    ind = np.zeros(n, dtype=np.float64)
+    for o in _canonical_offsets(n, offsets):
+        ind[o] = 1.0
+        ind[n - o] = 1.0  # same slot when o = n/2: counted once
+    # The connection set is symmetric, so the transform is real up to
+    # rounding.
+    return np.fft.fft(ind).real
+
+
+def adjacency_matvec(graph: "Graph") -> Callable[[np.ndarray], np.ndarray]:
+    """x -> Adj(G) x as a sparse bincount gather: O(m) per call, no
+    dense n x n adjacency."""
+    n = graph.n
+    if not graph.edges:
+        return lambda x: np.zeros(n, dtype=np.float64)
+    e = np.asarray(graph.edges, dtype=np.int64)
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+
+    def mv(x: np.ndarray) -> np.ndarray:
+        return np.bincount(src, weights=np.asarray(x, np.float64)[dst],
+                           minlength=n)
+
+    return mv
+
+
+@functools.lru_cache(maxsize=256)  # graphs are immutable; lambda_2 isn't
+def graph_lambda2(graph: "Graph", method: str = "auto") -> float:
+    """Second-largest adjacency eigenvalue of ``graph``.
+
+    Matches ``sort(eigvalsh(Adj))[-2]`` (the historical definition,
+    multiplicity included). Dispatch: 'fft' (exact, circulant metadata
+    required), 'dense' (exact, O(n^3)), 'lanczos' (matrix-free; regular
+    graphs only -- the top eigenvector is then the all-ones direction,
+    which gets deflated so lambda_2 = lambda_max on 1-perp even when
+    lambda_2 = d has multiplicity, e.g. disconnected graphs).
+    """
+    if method == "auto":
+        if graph.circulant_offsets is not None:
+            method = "fft"
+        elif graph.n <= _DENSE_N_MAX or not graph.is_regular():
+            method = "dense"
+        else:
+            method = "lanczos"
+    if method == "fft":
+        if graph.circulant_offsets is None:
+            raise ValueError("fft lambda_2 needs circulant metadata")
+        eigs = np.sort(circulant_spectrum(graph.n, graph.circulant_offsets))
+        return float(eigs[-2])
+    if method == "dense":
+        eigs = np.sort(np.linalg.eigvalsh(graph.adjacency()))
+        return float(eigs[-2])
+    if method != "lanczos":
+        raise ValueError(f"unknown lambda_2 method {method!r}")
+    if not graph.is_regular():
+        raise ValueError("lanczos lambda_2 needs a regular graph "
+                         "(unknown Perron vector otherwise); use 'dense'")
+    mv = adjacency_matvec(graph)
+    d = float(graph.degrees()[0]) if graph.edges else 0.0
+
+    def deflated(v: np.ndarray) -> np.ndarray:
+        # P A P - (d+1) * 11^T/n: the all-ones direction is shifted to
+        # -(d+1) < -d <= lambda_min, so lambda_max of this operator is
+        # exactly lambda_2 (even when lambda_2 < 0, e.g. K_n).
+        mean_in = v.mean()
+        y = mv(v - mean_in)
+        return y - y.mean() - (d + 1.0) * mean_in
+
+    return float(lanczos_lambda_max(deflated, graph.n, seed=0))
+
+
+def spectral_expansion(graph: "Graph", method: str = "auto") -> float:
+    """lambda = max-degree - lambda_2; the ``Graph.spectral_expansion``
+    implementation (see its docstring for semantics)."""
+    d = float(np.max(graph.degrees())) if graph.edges else 0.0
+    return d - graph_lambda2(graph, method)

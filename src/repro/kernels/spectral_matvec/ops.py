@@ -1,0 +1,76 @@
+"""Public wrapper for the fused tall-skinny Gram matvec.
+
+Backend dispatch as in the other kernel packages: the Pallas kernel on
+TPU, the float64 NumPy oracle on CPU. Note the TPU path accumulates in
+float32; the 1e-8-grade agreement of the matrix-free covariance norm
+with the dense SVD is a property of the CPU/float64 path (callers that
+enforce tolerances should branch on ``uses_pallas()``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import ref
+
+_FORCE = None  # None | "ref" | "pallas"
+
+
+def _dispatch():
+    """-> ('ref', False) or ('pallas', interpret)."""
+    if _FORCE == "ref":
+        return "ref", False
+    use_pallas = _FORCE == "pallas"
+    interpret = False
+    if use_pallas or _FORCE is None:
+        try:
+            import jax
+
+            on_tpu = jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover
+            on_tpu = False
+        if use_pallas:
+            interpret = not on_tpu
+        else:
+            use_pallas = on_tpu
+    return ("pallas", interpret) if use_pallas else ("ref", False)
+
+
+def uses_pallas() -> bool:
+    """True when gram_matvec will run the float32 Pallas kernel."""
+    return _dispatch()[0] == "pallas"
+
+
+def prepare_operand(x):
+    """Stage the tall operand once for a run of gram_matvec calls
+    (e.g. a Lanczos iteration): device float32 when the Pallas path is
+    active -- avoiding a host upload per matvec -- float64 NumPy
+    otherwise (a no-copy view for float64 input)."""
+    if uses_pallas():
+        import jax.numpy as jnp
+
+        return jnp.asarray(x, jnp.float32)
+    return np.asarray(x, np.float64)
+
+
+def gram_matvec(x, v) -> np.ndarray:
+    """x: (R, k), v: (k,) -> x^T (x v) as float64 NumPy.
+
+    ``x`` may be a NumPy array or an operand staged by
+    ``prepare_operand`` (passed through without a host round-trip).
+    """
+    v = np.asarray(v)
+    if getattr(x, "ndim", 0) != 2 or v.shape != (x.shape[1],):
+        raise ValueError(f"need x (R, k) and v (k,), got "
+                         f"{getattr(x, 'shape', None)} and {v.shape}")
+    mode, interpret = _dispatch()
+    if mode == "pallas":
+        import jax.numpy as jnp
+
+        from . import kernel
+
+        out = kernel.gram_matvec(jnp.asarray(x, jnp.float32),
+                                 jnp.asarray(v, jnp.float32),
+                                 interpret=interpret)
+        return np.asarray(out, np.float64)
+    return ref.gram_matvec(x, v)

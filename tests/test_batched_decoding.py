@@ -110,6 +110,25 @@ def test_batched_fixed_rejects_p_ge_1():
         fixed_decode(A, np.ones(16, bool), 1.5)
 
 
+def test_adjacency_on_2regular_graph_uses_pinv():
+    """Regression: a d=2 adjacency assignment has A of shape n x n,
+    indistinguishable from the (n, m) of an edge scheme -- the explicit
+    ``machines`` marker must route it to the pseudoinverse, not the
+    edge-component decoder."""
+    from repro.core import adjacency_assignment
+
+    A = adjacency_assignment(cycle_graph(6))
+    assert A.machines == "vertices"
+    alive = np.array([True, True, False, True, True, True])
+    got = decode(A, alive, method="optimal")
+    ref = optimal_decode_pinv(A, alive)
+    np.testing.assert_allclose(got.alpha, ref.alpha, atol=1e-12)
+    assert not np.allclose(ref.alpha, 1.0)  # pinv optimum is non-flat
+    np.testing.assert_allclose(
+        batched_alpha(A, alive[None], method="optimal")[0], ref.alpha,
+        atol=1e-9)
+
+
 def test_batched_pinv_fallback_matches_scalar():
     A = bernoulli_assignment(8, 16, 3, seed=0)
     masks = RNG.random((6, 16)) >= 0.3
@@ -117,6 +136,58 @@ def test_batched_pinv_fallback_matches_scalar():
     ref = np.stack(
         [optimal_decode_pinv(A, mk).alpha for mk in masks])
     np.testing.assert_allclose(out, ref, atol=1e-9)
+
+
+def test_numpy_labels_narrow_to_int16():
+    from repro.core.batched_decoding import _label_dtype, _propagate_numpy
+
+    g = cycle_graph(12)
+    masks = RNG.random((3, 12)) >= 0.3
+    assert _propagate_numpy(g, masks).dtype == np.int16
+    assert _label_dtype(12) == np.int16
+    assert _label_dtype(16383) == np.int16   # 2n = 32766 still fits
+    assert _label_dtype(16384) == np.int32   # 2n = 32768 does not
+
+
+@pytest.mark.skipif(not _HAS_JAX, reason="jax not installed")
+def test_backends_agree_across_int16_threshold():
+    """Both backends, bit-identical alphas, on graphs straddling the
+    2n < 32768 label-dtype threshold (int16 below, int32 above)."""
+    from repro.core.batched_decoding import _label_dtype
+
+    for n in (16383, 16385):
+        g = cycle_graph(n)
+        masks = RNG.random((4, g.m)) >= 0.15
+        masks[0, :] = True
+        a_np = batched_optimal_alpha_graph(g, masks, backend="numpy")
+        a_jx = batched_optimal_alpha_graph(g, masks, backend="jax")
+        np.testing.assert_array_equal(a_np, a_jx)
+        # even cycle fully alive is bipartite and balanced; odd is an
+        # odd cycle: alpha = 1 either way
+        np.testing.assert_array_equal(a_np[0], np.ones(n))
+    assert _label_dtype(16383) != _label_dtype(16385)
+
+
+def test_warm_start_labels_bit_identical():
+    """Seeding propagation with a subset-mask's labels (the sweep's
+    nested-in-p protocol) must not change the fixed point."""
+    g = random_regular_graph(20, 4, seed=2)
+    u = RNG.random((10, g.m))
+    prev = None
+    for p in (0.7, 0.4, 0.2, 0.0):  # descending p: alive sets grow
+        alive = u >= p
+        cold = batched_optimal_alpha_graph(g, alive, backend="numpy")
+        warm, labels = batched_optimal_alpha_graph(
+            g, alive, backend="numpy", labels0=prev, return_labels=True)
+        np.testing.assert_array_equal(warm, cold)
+        if _HAS_JAX:
+            warm_jx = batched_optimal_alpha_graph(
+                g, alive, backend="jax", labels0=prev)
+            np.testing.assert_array_equal(warm_jx, cold)
+        prev = labels
+    with pytest.raises(ValueError, match="labels0"):
+        batched_optimal_alpha_graph(g, u >= 0.5, backend="numpy",
+                                    labels0=np.zeros((10, 7), np.int16))
 
 
 def test_mask_shape_validation():

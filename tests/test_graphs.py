@@ -47,6 +47,29 @@ def test_circulant_vertex_transitive_degree():
     assert (g.degrees() == 6).all()
 
 
+def test_circulant_half_offset_dedup():
+    # o = n/2 pairs with itself: each such edge must appear exactly once
+    # (the seen-set dedup), giving degree 2*|offs<n/2| + 1.
+    g = G.circulant_graph(8, (2, 4))
+    assert g.is_regular() and (g.degrees() == 3).all()
+    assert g.m == 12
+    # duplicate / mirrored offsets collapse like the edge dedup does
+    g2 = G.circulant_graph(10, (1, 9, 1))
+    assert (g2.degrees() == 2).all()
+    assert g2.circulant_offsets == (1,)
+
+
+def test_sqrt_mod_annotations_resolve():
+    import typing
+
+    # regression: `Optional` was used in the annotation but not
+    # imported, a latent NameError for runtime annotation inspection
+    hints = typing.get_type_hints(G._sqrt_mod)
+    assert hints["return"] == G.Optional[int]
+    assert G._sqrt_mod(4, 13) in (2, 11)
+    assert G._sqrt_mod(5, 7) is None
+
+
 @pytest.mark.slow
 def test_lps_graph_is_ramanujan():
     g = G.lps_graph(5, 13)

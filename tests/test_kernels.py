@@ -12,6 +12,8 @@ from repro.kernels.coded_combine import kernel as cc_k, ref as cc_r
 from repro.kernels.decode_attention import kernel as da_k, ref as da_r
 from repro.kernels.rmsnorm import kernel as rn_k, ops as rn_ops, \
     ref as rn_r
+from repro.kernels.spectral_matvec import kernel as sm_k, ops as sm_ops, \
+    ref as sm_r
 
 RNG = np.random.default_rng(0)
 
@@ -113,6 +115,30 @@ def test_batched_alpha_fused_error_kernel_matches_ref(T, n, bt):
     ref = ba_r.fused_error(a, scale)
     np.testing.assert_allclose(np.asarray(out, np.float64), ref,
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("R,k,br", [(64, 16, None), (100, 1, 16),
+                                    (256, 130, 32), (33, 64, None),
+                                    (17, 384, 8), (2184, 30, None)])
+def test_spectral_matvec_kernel_matches_ref(R, k, br):
+    x = RNG.normal(size=(R, k))
+    v = RNG.normal(size=k)
+    out = sm_k.gram_matvec(jnp.asarray(x, jnp.float32),
+                           jnp.asarray(v, jnp.float32), block_r=br,
+                           interpret=True)
+    ref = sm_r.gram_matvec(x, v)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(out, np.float64) / scale,
+                               ref / scale, atol=5e-6, rtol=0)
+
+
+def test_spectral_matvec_ops_is_float64_oracle_on_cpu():
+    x = RNG.normal(size=(50, 7))
+    v = RNG.normal(size=7)
+    np.testing.assert_array_equal(sm_ops.gram_matvec(x, v),
+                                  sm_r.gram_matvec(x, v))
+    with pytest.raises(ValueError, match="R, k"):
+        sm_ops.gram_matvec(x, np.ones(3))
 
 
 def test_batched_alpha_ops_debias_matches_debias_alpha():

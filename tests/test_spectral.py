@@ -1,0 +1,162 @@
+"""Matrix-free spectral toolkit vs closed forms and dense references.
+
+Closed forms (the satellite contract): cycle lambda_2 = 2cos(2pi/n),
+hypercube lambda = 2, Paley lambda_2 = (sqrt(q)-1)/2; matrix-free
+covariance norm vs np.linalg.norm(cov, 2) to 1e-8 on small cases. Every
+dispatch path (fft / dense / lanczos) is exercised against the others.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import graphs as G
+from repro.core import spectral as S
+from repro.kernels.spectral_matvec import ops as sm_ops
+
+RNG = np.random.default_rng(0)
+
+# The 1e-8 covariance agreement is a float64 contract; on TPU the Gram
+# matvec runs the float32 Pallas kernel and only coarse bounds apply.
+FLOAT64_MATVEC = not sm_ops.uses_pallas()
+
+
+# ---------------------------------------------------------------------------
+# graph lambda_2 / spectral expansion
+# ---------------------------------------------------------------------------
+
+
+def test_cycle_lambda2_closed_form_all_methods():
+    for n in (10, 21, 64):
+        g = G.cycle_graph(n)
+        want = 2.0 * np.cos(2.0 * np.pi / n)
+        assert g.circulant_offsets == (1,)
+        for method in ("auto", "fft", "dense", "lanczos"):
+            assert S.graph_lambda2(g, method) == pytest.approx(
+                want, abs=1e-8), method
+        assert g.spectral_expansion() == pytest.approx(2.0 - want,
+                                                       abs=1e-8)
+
+
+def test_hypercube_expansion_closed_form():
+    for k in (3, 4):
+        g = G.hypercube_graph(k)
+        # lambda_2 = k - 2 exactly, with multiplicity k.
+        assert g.spectral_expansion("dense") == pytest.approx(2.0,
+                                                              abs=1e-8)
+        assert g.spectral_expansion("lanczos") == pytest.approx(2.0,
+                                                                abs=1e-8)
+
+
+def test_paley_lambda2_closed_form():
+    q = 13
+    g = G.paley_graph(q)
+    want = (np.sqrt(q) - 1) / 2
+    assert g.circulant_offsets is not None  # exact FFT path
+    for method in ("auto", "fft", "dense", "lanczos"):
+        assert S.graph_lambda2(g, method) == pytest.approx(want, abs=1e-8)
+
+
+def test_complete_graph_negative_lambda2():
+    # K_n has lambda_2 = -1: the deflation shift must not clamp to 0.
+    g = G.complete_graph(8)
+    assert S.graph_lambda2(g, "dense") == pytest.approx(-1.0, abs=1e-8)
+    assert S.graph_lambda2(g, "lanczos") == pytest.approx(-1.0, abs=1e-8)
+
+
+def test_circulant_spectrum_matches_dense():
+    for n, offs in [(16, (1, 3, 5)), (10, (2, 5)), (12, (1, 6)),
+                    (9, (1, 2))]:
+        g = G.circulant_graph(n, offs)
+        dense = np.sort(np.linalg.eigvalsh(g.adjacency()))
+        fft = np.sort(S.circulant_spectrum(n, offs))
+        np.testing.assert_allclose(fft, dense, atol=1e-8)
+        # Graph metadata reproduces the same spectrum (canonical form).
+        fft_meta = np.sort(S.circulant_spectrum(n, g.circulant_offsets))
+        np.testing.assert_allclose(fft_meta, dense, atol=1e-8)
+
+
+def test_lambda2_multiplicity_disconnected():
+    # Two 4-cycles: top eigenvalue 2 has multiplicity 2, so lambda_2 = 2
+    # (the historical sort(eigvalsh)[-2] convention).
+    edges = ((0, 1), (1, 2), (2, 3), (3, 0),
+             (4, 5), (5, 6), (6, 7), (7, 4))
+    g = G.Graph(8, edges)
+    assert S.graph_lambda2(g, "dense") == pytest.approx(2.0, abs=1e-8)
+    assert S.graph_lambda2(g, "lanczos") == pytest.approx(2.0, abs=1e-8)
+
+
+def test_lanczos_rejects_irregular():
+    g = G.Graph(4, ((0, 1), (1, 2), (2, 3), (1, 3)))
+    with pytest.raises(ValueError, match="regular"):
+        S.graph_lambda2(g, "lanczos")
+    # auto must route irregular graphs to dense, not lanczos
+    assert S.graph_lambda2(g, "auto") == pytest.approx(
+        S.graph_lambda2(g, "dense"), abs=1e-12)
+
+
+def test_metadata_excluded_from_eq_and_hash():
+    base = G.cycle_graph(8)
+    bare = G.Graph(8, base.edges)
+    assert base == bare
+    assert hash(base) == hash(bare)
+
+
+def test_make_expander_cached_and_lps_like_metadata():
+    a = G.make_expander(16, 4, vertex_transitive=True, seed=0)
+    b = G.make_expander(16, 4, vertex_transitive=True, seed=0)
+    assert a is b  # process-level construction cache
+    g = G.lps_like_cayley_expander(16, 4, seed=0)
+    assert g.circulant_offsets is not None
+    assert g.is_regular() and (g.degrees() == 4).all()
+    assert g.is_connected()
+    # the FFT lambda agrees with the dense one on the built graph
+    assert S.graph_lambda2(g, "fft") == pytest.approx(
+        S.graph_lambda2(g, "dense"), abs=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# matrix-free covariance norm
+# ---------------------------------------------------------------------------
+
+
+def test_covariance_norm_matches_dense_small_cases():
+    for shape in [(12, 7), (5, 40), (30, 30), (40, 3), (2, 6), (64, 17)]:
+        a = RNG.normal(size=shape) * RNG.uniform(0.5, 2.0, size=shape[1])
+        dense = S.covariance_spectral_norm(a, method="dense")
+        lanczos = S.covariance_spectral_norm(a, method="lanczos")
+        assert dense == pytest.approx(
+            float(np.linalg.norm(np.cov(a.T, bias=True), 2)), rel=1e-9)
+        tol = 1e-8 if FLOAT64_MATVEC else 5e-3
+        assert abs(lanczos - dense) <= tol * max(dense, 1.0), shape
+
+
+def test_covariance_norm_dense_matches_historical_expression():
+    a = RNG.normal(loc=1.0, scale=0.1, size=(25, 9))
+    centered = a - a.mean(axis=0, keepdims=True)
+    cov = centered.T @ centered / 25
+    assert S.covariance_spectral_norm(a, method="dense") == \
+        float(np.linalg.norm(cov, 2))
+
+
+def test_covariance_norm_degenerate():
+    assert S.covariance_spectral_norm(np.zeros((8, 5)),
+                                      method="lanczos") == 0.0
+    const = np.ones((6, 4)) * 3.7  # identical rows: zero covariance
+    assert S.covariance_spectral_norm(const, method="lanczos") == \
+        pytest.approx(0.0, abs=1e-12)
+    assert S.covariance_spectral_norm(np.zeros((0, 5))) == 0.0
+    with pytest.raises(ValueError, match="trials"):
+        S.covariance_spectral_norm(np.zeros(5))
+    with pytest.raises(ValueError, match="method"):
+        S.covariance_spectral_norm(np.zeros((3, 3)), method="qr")
+
+
+def test_lanczos_lambda_max_exhaustion_exact():
+    # Symmetric matrix with clustered top eigenvalues: exhaustion must
+    # still recover the max exactly.
+    d = np.array([5.0, 5.0 - 1e-9, 4.999, -2.0, 0.0, 1.0])
+    q, _ = np.linalg.qr(RNG.normal(size=(6, 6)))
+    M = q @ np.diag(d) @ q.T
+    lam = S.lanczos_lambda_max(lambda v: M @ v, 6)
+    assert lam == pytest.approx(5.0, abs=1e-10)
+    assert S.lanczos_lambda_max(lambda v: v * 0.0, 4) == 0.0

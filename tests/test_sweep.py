@@ -1,0 +1,129 @@
+"""Grid-sweep engine vs per-point ``monte_carlo_error``.
+
+The acceptance contract: under the shared-uniform protocol every sweep
+row is bit-identical to the corresponding per-point call (mean/std for
+any cov method; cov_norm too when both sides use the dense path), warm
+starts change nothing, and the matrix-free covariance path stays within
+1e-8 of the dense SVD on these scales.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (bernoulli_uniforms, batched_alpha, decode_grid,
+                        bernoulli_assignment, expander_assignment,
+                        frc_assignment, graph_assignment,
+                        monte_carlo_error, random_regular_graph,
+                        sweep_error)
+from repro.core.batched_decoding import _HAS_JAX
+from repro.kernels.spectral_matvec import ops as sm_ops
+
+RNG = np.random.default_rng(0)
+P_GRID = (0.05, 0.1, 0.2, 0.3, 0.45)
+# float64 contract off-TPU; coarse bound when the f32 Pallas path runs
+COV_TOL = 1e-8 if not sm_ops.uses_pallas() else 5e-3
+
+
+def test_sweep_bit_identical_to_per_point():
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    for method in ("optimal", "fixed"):
+        rows = sweep_error(A, P_GRID, trials=40, method=method, seed=9)
+        for p, row in zip(P_GRID, rows):
+            mc = monte_carlo_error(A, p, trials=40, method=method, seed=9)
+            assert row["p"] == p
+            assert row["mean_error"] == mc["mean_error"]
+            assert row["std_error"] == mc["std_error"]
+            assert row["cov_norm"] == mc["cov_norm"]  # dense at n=16
+
+
+def test_sweep_order_and_warm_start_invariance():
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=0)
+    shuffled = (0.3, 0.05, 0.45, 0.1)
+    warm = sweep_error(A, shuffled, trials=30, seed=2, warm_start=True)
+    cold = sweep_error(A, shuffled, trials=30, seed=2, warm_start=False)
+    assert warm == cold
+    ascending = sweep_error(A, tuple(sorted(shuffled)), trials=30, seed=2)
+    by_p = {r["p"]: r for r in ascending}
+    for r in warm:
+        assert r == by_p[r["p"]]
+
+
+@pytest.mark.skipif(not _HAS_JAX, reason="jax not installed")
+def test_sweep_jax_backend_matches_numpy():
+    g = random_regular_graph(16, 4, seed=0)
+    A = graph_assignment(g)
+    r_np = sweep_error(A, (0.1, 0.3, 0.6), trials=20, seed=3,
+                       backend="numpy")
+    r_jx = sweep_error(A, (0.1, 0.3, 0.6), trials=20, seed=3,
+                       backend="jax")
+    assert r_np == r_jx
+
+
+def test_sweep_cov_lanczos_close_to_dense():
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    dense = sweep_error(A, P_GRID, trials=50, seed=4, cov_method="dense")
+    lanc = sweep_error(A, P_GRID, trials=50, seed=4, cov_method="lanczos")
+    for d_, l_ in zip(dense, lanc):
+        assert d_["mean_error"] == l_["mean_error"]
+        assert abs(d_["cov_norm"] - l_["cov_norm"]) <= \
+            COV_TOL * max(d_["cov_norm"], 1.0)
+
+
+def test_decode_grid_matches_batched_alpha_per_point():
+    u = bernoulli_uniforms(24, 16, seed=5)
+    grid = (0.2, 0.5)
+    masks = np.stack([u >= p for p in grid])
+    # graph scheme (warm start exercised: descending-p given order)
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    out = decode_grid(A, masks[::-1], warm_start=True)[::-1]
+    for i, p in enumerate(grid):
+        np.testing.assert_array_equal(
+            out[i], batched_alpha(A, masks[i], method="optimal"))
+    # FRC closed form and pseudoinverse fallback dispatch per point
+    F = frc_assignment(24, 3)
+    out_f = decode_grid(F, masks)
+    B = bernoulli_assignment(8, 24, 3, seed=0)
+    out_b = decode_grid(B, masks)
+    for i in range(len(grid)):
+        np.testing.assert_array_equal(
+            out_f[i], batched_alpha(F, masks[i], method="optimal"))
+        np.testing.assert_allclose(
+            out_b[i], batched_alpha(B, masks[i], method="optimal"),
+            atol=1e-12)
+    # fixed decoding needs the per-point p
+    out_fixed = decode_grid(A, masks, method="fixed", p_grid=grid)
+    for i, p in enumerate(grid):
+        np.testing.assert_array_equal(
+            out_fixed[i], batched_alpha(A, masks[i], method="fixed", p=p))
+
+
+def test_decode_grid_validation():
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=0)
+    with pytest.raises(ValueError, match="trials"):
+        decode_grid(A, np.ones((2, 16), bool))
+    with pytest.raises(ValueError, match="p_grid"):
+        decode_grid(A, np.ones((2, 3, 16), bool), method="fixed",
+                    p_grid=(0.1,))
+    with pytest.raises(ValueError, match="per-point p"):
+        decode_grid(A, np.ones((2, 3, 16), bool), method="fixed")
+    # warm_start rejects non-nested masks instead of silently
+    # corrupting alphas with a stale label seed
+    u = bernoulli_uniforms(16, 3, seed=8)
+    nested = np.stack([u >= p for p in (0.6, 0.2)])  # descending p
+    decode_grid(A, nested, warm_start=True)  # ok
+    with pytest.raises(ValueError, match="nested"):
+        decode_grid(A, nested[::-1], warm_start=True)  # ascending p
+    rng = np.random.default_rng(0)
+    indep = rng.random((2, 3, 16)) >= 0.5  # independent masks
+    with pytest.raises(ValueError, match="nested"):
+        decode_grid(A, indep, warm_start=True)
+
+
+def test_monte_carlo_error_cov_method_param():
+    A = expander_assignment(16, 4, vertex_transitive=False, seed=0)
+    d_ = monte_carlo_error(A, 0.3, trials=40, seed=1)
+    l_ = monte_carlo_error(A, 0.3, trials=40, seed=1,
+                           cov_method="lanczos")
+    assert d_["mean_error"] == l_["mean_error"]
+    assert abs(d_["cov_norm"] - l_["cov_norm"]) <= \
+        COV_TOL * max(d_["cov_norm"], 1.0)
