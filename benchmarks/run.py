@@ -33,11 +33,13 @@ def main() -> None:
                     help="fast mode (the default unless --full is given)")
     ap.add_argument("--only", default=None,
                     help="comma list: decoding_error,convergence,"
-                         "adversarial,bounds,kernels,roofline")
+                         "adversarial,bounds,kernels,roofline,train_step")
     ap.add_argument("--bench-json", default="BENCH_decoding.json",
                     help="where to write the decoding perf report")
     ap.add_argument("--sweep-json", default="BENCH_sweep.json",
                     help="where to write the grid-sweep perf report")
+    ap.add_argument("--train-json", default="BENCH_train.json",
+                    help="where to write the dist train-step report")
     args = ap.parse_args()
     if args.full and args.fast:
         ap.error("--fast and --full are mutually exclusive")
@@ -45,7 +47,7 @@ def main() -> None:
 
     from benchmarks import (adversarial, bounds, convergence,
                             decoding_error, expansion_ablation,
-                            kernel_bench, roofline_report)
+                            kernel_bench, roofline_report, train_step)
     suite = {
         "decoding_error": decoding_error.main,   # Fig 3
         "convergence": convergence.main,         # Fig 4/5
@@ -54,6 +56,7 @@ def main() -> None:
         "expansion": expansion_ablation.main,    # Thm IV.1 lambda ablation
         "kernels": kernel_bench.main,            # TPU-adaptation layer
         "roofline": roofline_report.main,        # Dry-run #Roofline
+        "train_step": train_step.main,           # repro.dist mesh runtime
     }
     wanted = args.only.split(",") if args.only else list(suite)
     t0 = time.time()
@@ -62,6 +65,18 @@ def main() -> None:
         print(f"\n=== {name} ===")
         sys.stdout.flush()
         results[name] = suite[name](fast=fast)
+
+    if results.get("train_step"):
+        report = dict(results["train_step"])
+        report["mode"] = "fast" if fast else "full"
+        with open(args.train_json, "w") as f:
+            json.dump(report, f, indent=2)
+        runs = {r["scheme"]: r for r in report["runs"]}
+        print(f"wrote {args.train_json}: coded "
+              f"{runs['expander']['step_ms']:.1f} ms/step "
+              f"({runs['expander']['tokens_per_s']:.0f} tok/s, decode "
+              f"{runs['expander']['decode_us_per_step']:.0f} us) vs "
+              f"uncoded {runs['uncoded']['step_ms']:.1f} ms/step")
 
     if args.only is not None and "decoding_error" not in wanted:
         # A filtered run of unrelated suites shouldn't pay for (or

@@ -1,0 +1,163 @@
+"""Coded-vs-uncoded train-step benchmark on the 8-virtual-device mesh.
+
+Measures, for the real ``repro.dist`` runtime (smoke config, (4, 2)
+mesh of virtual CPU devices):
+
+* per-step wall time (median over timed steps, compile excluded),
+* unique tokens/s (global batch x seq len / step time -- replicated
+  coded compute is overhead, not throughput),
+* host-side decode latency: per-step ``CodingRuntime.step_weights``
+  (sample + cached O(m) optimal decode) and the batched
+  ``decode_batch`` path, in microseconds.
+
+The measurement loop runs in a subprocess because the virtual-device
+count must land in XLA_FLAGS before jax initialises; ``main`` (the
+``benchmarks.run`` entry) spawns it and returns the parsed report,
+which run.py writes to BENCH_train.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+N_DEVICES = 8
+
+
+def _measure_one(scheme: str, decoding: str, *, steps: int,
+                 seq_len: int, block_size: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import CodingConfig, get_config
+    from repro.data.pipeline import CodedBatcher, SyntheticLM
+    from repro.dist import coded_train, sharding as rules
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import model as M
+    from repro.optim import optimizers as opt_mod
+
+    cfg = get_config("qwen1.5-4b").smoke_variant()
+    mesh = make_test_mesh((N_DEVICES // 2, 2))
+    m_workers = mesh.shape["data"]
+    coding = CodingConfig(scheme=scheme, replication=2, decoding=decoding,
+                          straggler_p=0.2, seed=0)
+    runtime = coded_train.CodingRuntime(coding, m_workers)
+    n_blocks = runtime.assignment.n
+    global_batch = n_blocks * block_size
+    source = SyntheticLM(cfg.vocab_size, seq_len, seed=0)
+    batcher = CodedBatcher(runtime.assignment, shuffle_seed=0)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    optimizer = opt_mod.get_optimizer("adamw", 1e-3)
+    opt_state = optimizer.init(params)
+    pshard = rules.named(mesh, rules.safe_param_specs(params, mesh))
+    repl = rules.replicated(mesh)
+
+    train_step = coded_train.make_train_step(cfg, optimizer)
+    step_fn = None
+    step_times, decode_times = [], []
+    with mesh:
+        params = jax.device_put(params, pshard)
+        for step in range(steps):
+            batch_np = batcher.code_batch(source.batch(global_batch, step))
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            bshard = rules.batch_shardings(mesh, batch)
+            batch = {k: jax.device_put(v, bshard[k])
+                     for k, v in batch.items()}
+            t0 = time.perf_counter()
+            w, _ = runtime.step_weights()
+            decode_times.append(time.perf_counter() - t0)
+            wv = jax.device_put(jnp.asarray(w), repl)
+            if step_fn is None:
+                step_fn = jax.jit(
+                    train_step,
+                    in_shardings=(pshard, None, bshard, repl),
+                    out_shardings=(pshard, None, None))
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state,
+                                                 batch, wv)
+            jax.block_until_ready(metrics["loss"])
+            step_times.append(time.perf_counter() - t0)
+    warm = step_times[2:] or step_times  # first steps pay compile
+    step_s = float(np.median(warm))
+    # Batched host decode over one lookahead horizon of fresh masks.
+    rng = np.random.default_rng(1)
+    masks = rng.random((256, m_workers)) >= 0.2
+    t0 = time.perf_counter()
+    runtime.decode_batch(masks)
+    batched_us = (time.perf_counter() - t0) / masks.shape[0] * 1e6
+    return {
+        "scheme": scheme,
+        "decoding": decoding,
+        "m_workers": m_workers,
+        "global_batch": global_batch,
+        "seq_len": seq_len,
+        "step_ms": round(step_s * 1e3, 2),
+        "tokens_per_s": round(global_batch * seq_len / step_s, 1),
+        "decode_us_per_step": round(
+            float(np.mean(decode_times[1:] or decode_times)) * 1e6, 1),
+        "decode_us_per_mask_batched": round(batched_us, 1),
+        "decode_calls": runtime.decode_calls,
+        "final_loss": float(metrics["loss"]),
+    }
+
+
+def worker(full: bool) -> None:
+    steps = 24 if full else 8
+    report = {
+        "n_virtual_devices": N_DEVICES,
+        "steps_timed": steps,
+        "runs": [
+            _measure_one("expander", "optimal", steps=steps, seq_len=64,
+                         block_size=4),
+            _measure_one("uncoded", "fixed", steps=steps, seq_len=64,
+                         block_size=4),
+        ],
+    }
+    print("BENCH_TRAIN_JSON:" + json.dumps(report))
+
+
+def main(fast: bool = True) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={N_DEVICES}")
+    cmd = [sys.executable, "-m", "benchmarks.train_step", "--worker"]
+    if not fast:
+        cmd.append("--full")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1200,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        raise RuntimeError(f"train_step worker failed:\n{proc.stdout}"
+                           f"\n{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("BENCH_TRAIN_JSON:")][-1]
+    report = json.loads(line.split(":", 1)[1])
+    for run in report["runs"]:
+        print(f"  {run['scheme']}/{run['decoding']}: "
+              f"{run['step_ms']:.1f} ms/step, "
+              f"{run['tokens_per_s']:.0f} tok/s, decode "
+              f"{run['decode_us_per_step']:.0f} us/step "
+              f"(batched {run['decode_us_per_mask_batched']:.0f} us/mask)")
+    coded, uncoded = report["runs"]
+    assert coded["decode_us_per_step"] < 0.2 * coded["step_ms"] * 1e3, \
+        "host decode must stay off the step critical path"
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.worker:
+        worker(args.full)
+    else:
+        print(json.dumps(main(fast=not args.full), indent=2))

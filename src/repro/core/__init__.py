@@ -12,6 +12,9 @@ Public surface of the paper's core contribution:
 - spectral:    matrix-free spectra (Lanczos covariance norm, FFT
                circulant eigenvalues, sparse-matvec graph lambda_2)
 - stragglers:  Bernoulli / fixed-count / Markov / adversarial attacks
+- step_weights: the shared straggler-sample -> decode -> debiased
+               step-weights pipeline (single-host GCOD and the
+               repro.dist mesh runtime both sit on it)
 - theory:      the paper's closed-form bounds
 - debias:      Prop B.1 black-box debiasing
 - coded_gd:    Algorithms 2 & 3 (single-host logical view)
@@ -36,8 +39,12 @@ from .spectral import (circulant_spectrum, covariance_spectral_norm,
                        graph_lambda2, lanczos_lambda_max)
 from .stragglers import (StragglerModel, BernoulliStragglers,
                          FixedCountStragglers, MarkovStragglers,
+                         AdversarialStragglers,
                          adversarial_mask, adversarial_mask_graph,
                          adversarial_mask_frc)
+from .step_weights import (make_straggler_model, sample_mask_stream,
+                           batched_step_weights, debias_scale_mc)
+from . import step_weights  # the module: step_weights.step_weights etc.
 from . import theory
 from .debias import debias_assignment, estimate_mean_alpha
 from .coded_gd import (LeastSquares, GDTrace, gcod, precompute_alphas,
@@ -59,8 +66,10 @@ __all__ = [
     "spectral", "circulant_spectrum", "covariance_spectral_norm",
     "graph_lambda2", "lanczos_lambda_max",
     "StragglerModel", "BernoulliStragglers", "FixedCountStragglers",
-    "MarkovStragglers", "adversarial_mask", "adversarial_mask_graph",
-    "adversarial_mask_frc",
+    "MarkovStragglers", "AdversarialStragglers", "adversarial_mask",
+    "adversarial_mask_graph", "adversarial_mask_frc",
+    "step_weights", "make_straggler_model", "sample_mask_stream",
+    "batched_step_weights", "debias_scale_mc",
     "theory", "debias_assignment", "estimate_mean_alpha",
     "LeastSquares", "GDTrace", "gcod", "precompute_alphas", "sgd_alg",
     "uncoded_gd",

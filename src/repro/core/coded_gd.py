@@ -20,6 +20,7 @@ import numpy as np
 
 from .assignment import Assignment
 from .batched_decoding import batched_alpha
+from .step_weights import sample_mask_stream as _sample_mask_stream
 from .stragglers import StragglerModel, BernoulliStragglers
 
 
@@ -65,26 +66,6 @@ class GDTrace:
     thetas: List[np.ndarray]
     errors: List[float]  # |theta_t - theta*|^2
     alphas: List[np.ndarray]
-
-
-def _sample_mask_stream(assignment: Assignment,
-                        straggler_model: StragglerModel, *, steps: int,
-                        shuffle: bool, rng: np.random.Generator):
-    """GCOD's RNG consumption protocol -- the rho permutation draw
-    (when shuffling), then one straggler mask per step. The single
-    source of truth shared by ``gcod`` and ``precompute_alphas``, so
-    precomputed alpha batches cannot desync from the in-loop stream.
-
-    Returns (rho, masks) with masks of shape (steps, m).
-    """
-    n = assignment.n
-    rho = rng.permutation(n) if shuffle else np.arange(n)
-    if steps:
-        masks = np.stack(
-            [straggler_model.sample(rng) for _ in range(steps)])
-    else:
-        masks = np.zeros((0, assignment.m), dtype=bool)
-    return rho, masks
 
 
 def precompute_alphas(assignment: Assignment,

@@ -1,0 +1,142 @@
+"""Straggler-sample -> decode -> debiased step-weights: one pipeline.
+
+Every consumer of the paper's update ``sum_j w*_j g_j`` needs the same
+three host-side stages each round: sample an alive mask from a straggler
+process, decode it into weights, and (optionally) rescale by the
+alpha-bar debias factor. Before this module, ``core/coded_gd.GCOD``,
+``core/sweep.py`` and the mesh runtime (``repro.dist.coded_train``)
+each grew their own copy of parts of that pipeline; this is the single
+``core`` entry point they all share now:
+
+- model construction from config strings (``make_straggler_model``),
+- the GCOD RNG-consumption protocol (``sample_mask_stream``, moved here
+  from ``coded_gd`` so the mesh runtime can reuse it),
+- per-mask machine weights w* (``step_weights``) and the batched form
+  (``batched_step_weights``) -- there is deliberately no third decoder
+  implementation here, only dispatch onto the existing ones,
+- the Monte-Carlo debias scale (``debias_scale_mc``), computed by one
+  ``batched_alpha`` call over a shared-uniform Bernoulli batch (the
+  sweep engine's sampling protocol).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from ..kernels.batched_alpha import ops as _ba_ops
+from .assignment import Assignment
+from .batched_decoding import batched_alpha, fixed_w
+from .decoding import decode
+from .stragglers import (AdversarialStragglers, BernoulliStragglers,
+                         FixedCountStragglers, MarkovStragglers,
+                         StragglerModel)
+from .sweep import bernoulli_uniforms
+
+STRAGGLER_MODELS = ("bernoulli", "markov", "adversarial", "fixed_count")
+
+
+def make_straggler_model(assignment: Assignment, name: str, p: float, *,
+                         persistence: float = 10.0) -> StragglerModel:
+    """Build one of the ``core.stragglers`` processes from its config
+    string. All models emit (m,) alive masks via ``sample(rng)``."""
+    m = assignment.m
+    if name == "bernoulli":
+        return BernoulliStragglers(m=m, p=p)
+    if name == "markov":
+        return MarkovStragglers(m=m, p=p, persistence=persistence)
+    if name == "adversarial":
+        return AdversarialStragglers(assignment=assignment, p=p)
+    if name == "fixed_count":
+        return FixedCountStragglers(m=m, p=p)
+    raise ValueError(f"unknown straggler model {name!r}; "
+                     f"known: {STRAGGLER_MODELS}")
+
+
+def sample_mask_stream(assignment: Assignment,
+                       straggler_model: StragglerModel, *, steps: int,
+                       shuffle: bool, rng: np.random.Generator
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """GCOD's RNG consumption protocol -- the rho permutation draw
+    (when shuffling), then one straggler mask per step. The single
+    source of truth shared by ``gcod``, ``precompute_alphas`` and the
+    mesh runtime, so precomputed alpha batches cannot desync from the
+    in-loop stream.
+
+    Returns (rho, masks) with masks of shape (steps, m).
+    """
+    n = assignment.n
+    rho = rng.permutation(n) if shuffle else np.arange(n)
+    if steps:
+        masks = np.stack(
+            [straggler_model.sample(rng) for _ in range(steps)])
+    else:
+        masks = np.zeros((0, assignment.m), dtype=bool)
+    return rho, masks
+
+
+def step_weights(assignment: Assignment, alive: np.ndarray, *,
+                 method: str = "optimal", p: float = 0.0,
+                 scale: float = 1.0) -> Tuple[np.ndarray, np.ndarray]:
+    """One mask -> (w (m,), alpha (n,)), both scaled by ``scale``.
+
+    Thin dispatch onto ``decoding.decode`` (the O(m) graph decoder /
+    FRC closed form / pseudoinverse / Section VIII fixed weights);
+    stragglers keep w = 0 under any scale.
+    """
+    res = decode(assignment, alive, method=method, p=p)
+    return res.w * scale, res.alpha * scale
+
+
+def batched_step_weights(assignment: Assignment, masks, *,
+                         method: str = "optimal", p: float = 0.0,
+                         scale: float = 1.0
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """A (T, m) mask batch -> (W (T, m), alphas (T, n)).
+
+    Fixed decoding is fully vectorised. Optimal decoding loops the
+    scalar ``decoding.decode`` dispatch once per mask -- w* needs the
+    spanning-tree back-substitution and each decode yields w and alpha
+    together, so this is the cheapest correct route to *machine*
+    weights. Alpha-only Monte-Carlo consumers (``gcod``, the sweep
+    engine, ``debias_scale_mc``) go through the ``batched_alpha``
+    engine instead, whose alphas are bit-identical for graph schemes
+    (property-tested in tests/test_batched_decoding.py).
+    """
+    masks = np.asarray(masks, dtype=bool)
+    if masks.ndim != 2 or masks.shape[1] != assignment.m:
+        raise ValueError(f"masks must be (T, {assignment.m}), "
+                         f"got {masks.shape}")
+    if method == "fixed":
+        W = fixed_w(masks, assignment.replication_factor, p)
+        alphas = W @ assignment.A.T
+    elif method != "optimal":
+        raise ValueError(f"unknown method {method!r}")
+    else:
+        results = [decode(assignment, a, method="optimal")
+                   for a in masks]
+        W = np.stack([r.w for r in results]) if results else \
+            np.zeros((0, assignment.m))
+        alphas = np.stack([r.alpha for r in results]) if results else \
+            np.zeros((0, assignment.n))
+    return W * scale, alphas * scale
+
+
+def debias_scale_mc(assignment: Assignment, *, p: float,
+                    method: str = "optimal", trials: int = 256,
+                    seed: int = 0, backend: str = "auto") -> float:
+    """Monte-Carlo alpha-bar debias factor |1|_2 / |E[alpha]|_2 under
+    Bernoulli(p) stragglers.
+
+    One ``batched_alpha`` call over the sweep engine's shared-uniform
+    draw -- the runtime analogue of ``sweep_error``'s per-point scale,
+    and what Prop B.1-style unbiasing costs at runtime: a single
+    pre-training decode batch instead of per-step estimation.
+    """
+    if trials <= 0:
+        raise ValueError("trials must be positive")
+    masks = bernoulli_uniforms(assignment.m, trials, seed) >= p
+    alphas = batched_alpha(assignment, masks, method=method, p=p,
+                           backend=backend)
+    return _ba_ops.debias_scale(alphas)

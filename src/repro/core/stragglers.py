@@ -79,6 +79,24 @@ class MarkovStragglers(StragglerModel):
         return ~nxt
 
 
+@dataclasses.dataclass
+class AdversarialStragglers(StragglerModel):
+    """Def I.3 as a *process*: every step replays the worst-case
+    |S| <= pm attack for the carried assignment (the adversary knows the
+    scheme and has no reason to move). Wraps ``adversarial_mask`` so the
+    attack plugs into the same ``sample(rng)`` protocol the stochastic
+    models use; the RNG is accepted and ignored."""
+
+    assignment: Assignment
+    p: float
+    _mask: Optional[np.ndarray] = None
+
+    def sample(self, rng: np.random.Generator) -> np.ndarray:
+        if self._mask is None:
+            self._mask = adversarial_mask(self.assignment, self.p)
+        return self._mask.copy()
+
+
 # ---------------------------------------------------------------------------
 # Adversarial attacks (Def I.3 instantiations)
 # ---------------------------------------------------------------------------

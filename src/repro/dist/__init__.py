@@ -1,0 +1,15 @@
+"""Distributed shard_map/pjit runtime for coded training.
+
+- ``sharding``:    mesh-axis helpers and path-pattern partition specs
+  (params, optimizer state, decode caches) with a divisibility fallback
+  to replication, valid on any (pod x data x model) mesh including the
+  1-device test mesh.
+- ``coded_train``: the coded train/prefill/serve steps and the
+  ``CodingRuntime`` host bridge (straggler sampling + optimal decoding
+  -> per-step w*), built on the single-host oracle in ``repro.core`` --
+  the two are tested against each other in tests/test_dist.py.
+"""
+
+from . import coded_train, sharding
+
+__all__ = ["coded_train", "sharding"]

@@ -1,0 +1,284 @@
+"""Coded training on a device mesh: the paper's update, for real.
+
+The parameter-server view (Glasgow & Wootters, Algorithm 2) is
+
+    theta <- theta - eta * sum_j w*_j g_j
+
+over m coded workers, where g_j is worker j's sum of assigned block
+gradients and w* comes from the O(m) optimal decoder applied to this
+round's straggler mask. On the mesh, the m workers are the (pod, data)
+shards: the coded batch carries a leading machine axis of size m (see
+``data.pipeline.CodedBatcher``), the per-worker weighted loss
+
+    L(theta) = (1/N) sum_j w_j sum_{l} block_weight_{jl} * L_{jl}(theta)
+
+is *linear in w*, so its autodiff gradient IS the paper's combine
+``sum_j w_j g_j`` -- the contract ``tests/test_dist.py`` pins against
+the explicit ``coded_combine_tree``. Under ``jit`` the machine axis is
+data-sharded and GSPMD inserts the psum; ``coded_allreduce`` is the
+same combine as an explicit ``shard_map`` collective for runs that
+want manual control over the reduction.
+
+Host side, ``CodingRuntime`` bridges ``repro.core``'s oracle into the
+training loop: it instantiates the assignment (expander / FRC /
+uncoded), samples one of the ``core.stragglers`` processes each step,
+and emits per-step w* through the shared
+``core.step_weights`` pipeline (decode dispatch + alpha-bar debias via
+the batched engine), memoising repeated masks -- stagnant stragglers
+(the paper's cluster observation, the Markov model here) make the
+decode cache hit almost every step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # newer jax moved it to the top level
+    shard_map = jax.shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CodingConfig, ModelConfig
+import repro.core.step_weights as sw
+from repro.core.assignment import (Assignment, expander_assignment,
+                                   frc_assignment, uncoded_assignment)
+from repro.kernels.coded_combine import ops as cc_ops
+from repro.models import model as M
+from repro.optim import optimizers as opt_mod
+
+from .sharding import data_axes
+
+
+# ---------------------------------------------------------------------------
+# Coded loss and train/prefill/serve steps
+# ---------------------------------------------------------------------------
+
+
+def coded_loss_fn(params, coded_batch: Dict[str, jnp.ndarray],
+                  w: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Per-block weighted coded loss; grad == sum_j w_j g_j (Eq. 1).
+
+    coded_batch leaves are (m, load, bs, ...) with a ``block_weight``
+    (m, load) mask (0 on padding slots of irregular assignments); w is
+    the (m,) decoding weights. The machine/load/batch axes flatten into
+    one forward pass, so the machine axis shards over the data axes of
+    the mesh without any per-machine python loop.
+    """
+    bw = coded_batch["block_weight"]                      # (m, load)
+    m, load = bw.shape
+    flat = {k: v.reshape((-1,) + v.shape[3:])
+            for k, v in coded_batch.items() if k != "block_weight"}
+    per_seq = M.train_loss(params, flat, cfg, per_example=True)
+    per_block = per_seq.reshape(m, load, -1).sum(axis=2)  # (m, load)
+    norm = coded_batch["labels"].size
+    return (w[:, None] * bw * per_block).sum() / norm
+
+
+def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
+                    n_microbatches: int = 1):
+    """(params, opt_state, coded_batch, w) -> (params, opt_state,
+    metrics).
+
+    ``n_microbatches`` > 1 accumulates gradients over equal splits of
+    the per-block batch axis under ``lax.scan`` (constant HLO size,
+    rematerialised activations): the mean of per-microbatch losses /
+    gradients equals the single-shot step because the coded loss is a
+    normalised sum over sequences. Accumulation is deliberately
+    float32 -- exact for the float32 param configs shipped here, and
+    the standard higher-precision accumulator if params ever go bf16
+    (where the single-shot step would differ by the grads' bf16
+    rounding, not by this sum).
+    """
+    nm = int(n_microbatches)
+    if nm < 1:
+        raise ValueError("n_microbatches must be >= 1")
+
+    def step(params, opt_state, batch, w):
+        if nm == 1:
+            loss, grads = jax.value_and_grad(coded_loss_fn)(
+                params, batch, w, cfg)
+        else:
+            bw = batch["block_weight"]
+
+            def to_micro(leaf):
+                m_, l_, bs_ = leaf.shape[:3]
+                if bs_ % nm:
+                    raise ValueError(
+                        f"block batch {bs_} not divisible by "
+                        f"{nm} microbatches")
+                x = leaf.reshape((m_, l_, nm, bs_ // nm) + leaf.shape[3:])
+                return jnp.moveaxis(x, 2, 0)   # (nm, m, load, bs/nm, ...)
+
+            micro = {k: to_micro(v) for k, v in batch.items()
+                     if k != "block_weight"}
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                mb = dict(mb)
+                mb["block_weight"] = bw
+                l, g = jax.value_and_grad(coded_loss_fn)(params, mb, w,
+                                                         cfg)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / nm, gsum)
+            loss = lsum / nm
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_mod.apply_updates(params, updates)
+        metrics = {"loss": loss,
+                   "grad_norm": opt_mod.global_norm(grads)}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> last-position logits (B, V_pad)."""
+    def step(params, batch):
+        return M.prefill(params, batch["tokens"], cfg,
+                         prefix=batch.get("prefix"),
+                         src=batch.get("src"))
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, window: Optional[int] = None):
+    """(params, token, cache) -> (logits, new_cache)."""
+    def step(params, token, cache):
+        return M.decode_step(params, token, cache, cfg, window=window)
+    return step
+
+
+def coded_allreduce(grads, w: jnp.ndarray, mesh):
+    """The paper combine as an explicit shard_map collective.
+
+    ``grads`` leaves carry a leading (global) machine axis of size m
+    sharded over the (pod, data) axes; ``w`` is the (m,) decoding
+    weights sharded the same way. Each shard w-weights and sums its
+    local machines through the ``coded_combine`` kernel, then a psum
+    over the worker axes produces the replicated global
+    ``sum_j w_j g_j``.
+    """
+    axes = data_axes(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    gspecs = jax.tree.map(lambda _: P(lead), grads)
+
+    def local_combine(g, w_local):
+        out = cc_ops.coded_combine_tree(g, w_local)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), out)
+
+    return shard_map(local_combine, mesh=mesh,
+                     in_specs=(gspecs, P(lead)),
+                     out_specs=jax.tree.map(lambda _: P(), grads))(
+        grads, w)
+
+
+# ---------------------------------------------------------------------------
+# Host-side coding runtime
+# ---------------------------------------------------------------------------
+
+
+def make_assignment(coding: CodingConfig, m: int) -> Assignment:
+    """Instantiate the block assignment for m coded workers."""
+    if coding.scheme == "expander":
+        return expander_assignment(m, coding.replication,
+                                   vertex_transitive=True,
+                                   seed=coding.seed)
+    if coding.scheme == "frc":
+        return frc_assignment(m, coding.replication)
+    if coding.scheme == "uncoded":
+        return uncoded_assignment(m)
+    raise ValueError(f"unknown scheme {coding.scheme!r} "
+                     "(expander | frc | uncoded)")
+
+
+@dataclasses.dataclass
+class CodingRuntime:
+    """Host bridge: assignment + straggler process + per-step weights.
+
+    One instance per run. ``step_weights()`` samples this round's alive
+    mask from the configured ``core.stragglers`` model and returns the
+    debiased decoding weights w (w_j = 0 on stragglers) for the train
+    step, memoised by mask: under stagnant straggler processes
+    (markov / adversarial) the same mask repeats for many consecutive
+    rounds and decoding drops out of the step latency entirely.
+
+    The alpha-bar debias scale is estimated once at construction --
+    optimal decoding shrinks alpha below 1 on average, and the scale
+    makes the expected update unbiased without per-step work. For the
+    stochastic models it is one ``batched_alpha`` decode of a Bernoulli
+    mask batch (``core.step_weights.debias_scale_mc``); the adversarial
+    model replays a single fixed mask, so its exact scale comes from
+    that mask's own alpha. Fixed decoding is already unbiased by
+    construction, so the scale stays 1 there.
+    """
+
+    coding: CodingConfig
+    m: int
+    debias: bool = True
+    debias_trials: int = 256
+    cache_size: int = 4096
+
+    def __post_init__(self):
+        self.assignment = make_assignment(self.coding, self.m)
+        self.model = sw.make_straggler_model(
+            self.assignment, self.coding.straggler_model,
+            self.coding.straggler_p)
+        self.rng = np.random.default_rng(self.coding.seed)
+        self.scale = 1.0
+        if self.debias and self.coding.decoding == "optimal":
+            if self.coding.straggler_model == "adversarial":
+                # The attack mask is deterministic: the exact debias
+                # factor is sqrt(n)/|alpha| of that one decode.
+                _, alpha = sw.step_weights(
+                    self.assignment, self.model.sample(self.rng),
+                    method="optimal")
+                self.scale = float(
+                    np.sqrt(alpha.size) /
+                    max(np.linalg.norm(alpha), 1e-30))
+            else:
+                # Offset the seed: bernoulli_uniforms(seed) replays the
+                # exact uniform stream the training masks consume, so
+                # the same seed would fit the scale in-sample on the
+                # run's own first `debias_trials` masks.
+                self.scale = sw.debias_scale_mc(
+                    self.assignment, p=self.coding.straggler_p,
+                    trials=self.debias_trials,
+                    seed=self.coding.seed + 0x5EED)
+        self._cache: Dict[bytes, np.ndarray] = {}
+        self.decode_calls = 0
+        self.steps_sampled = 0
+
+    def step_weights(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Sample one round: returns (w (m,) float32, alive (m,) bool)."""
+        alive = self.model.sample(self.rng)
+        self.steps_sampled += 1
+        key = alive.tobytes()
+        w = self._cache.get(key)
+        if w is None:
+            w, _ = sw.step_weights(
+                self.assignment, alive, method=self.coding.decoding,
+                p=self.coding.straggler_p, scale=self.scale)
+            w = w.astype(np.float32)
+            if len(self._cache) >= self.cache_size:
+                # FIFO eviction: i.i.d. models at large m never repeat
+                # masks, and the cache must not grow with step count.
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[key] = w
+            self.decode_calls += 1
+        return w, alive
+
+    def decode_batch(self, masks) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched (T, m) masks -> (W, alphas) through the shared
+        pipeline -- the lookahead/benchmark path."""
+        return sw.batched_step_weights(
+            self.assignment, masks, method=self.coding.decoding,
+            p=self.coding.straggler_p, scale=self.scale)

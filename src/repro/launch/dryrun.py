@@ -85,6 +85,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax < 0.5 returns [dict]
+        cost = cost[0] if cost else {}
     stats = hlo_analysis.analyze(compiled.as_text())
     n_chips = mesh.devices.size
     model = rl_mod.model_flops(cfg, shape,

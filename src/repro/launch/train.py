@@ -92,12 +92,8 @@ def main(argv=None) -> dict:
     M.set_residual_sharding(batch_axes=da1, model_axis="model")
     pspec = rules.safe_param_specs(params, mesh)
     pshard = rules.named(mesh, pspec)
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    repl = NamedSharding(mesh, P())
+    repl = rules.replicated(mesh)
     oshard = {"step": repl, "m": pshard, "v": pshard}
-
-    def bshard(leaf):
-        return NamedSharding(mesh, P(*([da1] + [None] * (leaf.ndim - 1))))
 
     train_step = coded_train.make_train_step(
         cfg, optimizer, n_microbatches=args.microbatches)
@@ -112,21 +108,24 @@ def main(argv=None) -> dict:
             batch_np = batcher.code_batch(
                 source.batch(global_batch, step))
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            batch = {k: jax.device_put(v, bshard(v))
+            bshard = rules.batch_shardings(mesh, batch)
+            batch = {k: jax.device_put(v, bshard[k])
                      for k, v in batch.items()}
             w, alive = runtime.step_weights()
             wv = jax.device_put(jnp.asarray(w), repl)
             if step_fn is None:
                 step_fn = jax.jit(
                     train_step,
-                    in_shardings=(pshard, oshard,
-                                  {k: bshard(v) for k, v in batch.items()},
-                                  repl),
+                    in_shardings=(pshard, oshard, bshard, repl),
                     out_shardings=(pshard, oshard, None),
                     donate_argnums=(0, 1))
             params, opt_state, metrics = step_fn(params, opt_state,
                                                  batch, wv)
-            losses.append(float(metrics["loss"]))
+            # The raw coded loss is scaled by this step's straggler
+            # draw (sum_i alpha_i varies); report the debiased estimate
+            # loss / mean(alpha) so steps are comparable across draws.
+            alpha_bar = float((runtime.assignment.A @ w).mean())
+            losses.append(float(metrics["loss"]) / max(alpha_bar, 1e-3))
             if step % max(1, args.steps // 10) == 0 or \
                     step == args.steps - 1:
                 print(f"step {step:4d} loss {losses[-1]:.4f} "

@@ -1,0 +1,99 @@
+"""CodingRuntime host bridge: straggler processes x decode paths.
+
+Covers the pieces the dist tests don't: the Markov (stagnant) model's
+run statistics and decode-cache behaviour, the w[~alive] == 0
+invariant across all three straggler models, and the batched
+step-weights path against the scalar decoder.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.step_weights as sw
+from repro.configs import CodingConfig
+from repro.core import (expander_assignment, frc_assignment,
+                        optimal_decode_frc)
+from repro.dist import coded_train
+
+M_WORKERS = 8
+
+
+def _runtime(**kw):
+    kw.setdefault("scheme", "expander")
+    kw.setdefault("replication", 2)
+    return coded_train.CodingRuntime(CodingConfig(**kw), m=M_WORKERS)
+
+
+@pytest.mark.parametrize("model", ["bernoulli", "markov", "adversarial"])
+def test_w_zero_on_stragglers_all_models(model):
+    rt = _runtime(straggler_model=model, straggler_p=0.25, seed=3)
+    for _ in range(50):
+        w, alive = rt.step_weights()
+        assert w.shape == (M_WORKERS,)
+        assert np.isfinite(w).all()
+        assert (w[~alive] == 0).all()
+
+
+def test_markov_runs_are_stagnant():
+    """The Markov model exists because straggling machines stay
+    stagnant (paper Section VIII): per-machine state flips must be far
+    rarer than under i.i.d. Bernoulli with the same stationary p."""
+    rt = _runtime(straggler_model="markov", straggler_p=0.3, seed=0)
+    masks = np.stack([rt.step_weights()[1] for _ in range(400)])
+    straggle_rate = (~masks).mean()
+    assert 0.15 < straggle_rate < 0.45  # stationary distribution ~ p
+    flip_rate = (masks[1:] != masks[:-1]).mean()
+    iid_flip = 2 * 0.3 * 0.7  # = 0.42
+    assert flip_rate < iid_flip / 2, (flip_rate, iid_flip)
+
+
+def test_decode_cache_hits_on_stagnant_processes():
+    rt = _runtime(straggler_model="adversarial", straggler_p=0.25)
+    for _ in range(20):
+        rt.step_weights()
+    assert rt.steps_sampled == 20
+    assert rt.decode_calls == 1  # the adversarial mask never moves
+    rt2 = _runtime(straggler_model="markov", straggler_p=0.3, seed=1)
+    for _ in range(100):
+        rt2.step_weights()
+    assert rt2.decode_calls < rt2.steps_sampled
+
+
+def test_debias_scale_counteracts_optimal_shrinkage():
+    """Optimal decoding has E[alpha] <= 1; the runtime scale must be
+    >= 1 and make |E[scaled alpha]|_2 = sqrt(n)."""
+    rt = _runtime(straggler_model="bernoulli", straggler_p=0.3)
+    assert rt.scale >= 1.0
+    A = rt.assignment
+    W, alphas = rt.decode_batch(
+        np.random.default_rng(0).random((64, A.m)) >= 0.3)
+    # A w = alpha holds through the shared scale (decoder invariant).
+    np.testing.assert_allclose(W @ A.A.T, alphas, atol=1e-9)
+
+
+def test_batched_step_weights_matches_scalar_graph():
+    A = expander_assignment(M_WORKERS, 2, vertex_transitive=True, seed=0)
+    masks = np.random.default_rng(1).random((32, A.m)) >= 0.35
+    W, alphas = sw.batched_step_weights(A, masks)
+    for t in range(masks.shape[0]):
+        w_t, a_t = sw.step_weights(A, masks[t])
+        np.testing.assert_allclose(W[t], w_t, atol=1e-12)
+        np.testing.assert_allclose(alphas[t], a_t, atol=1e-12)
+
+
+def test_batched_step_weights_matches_scalar_frc():
+    A = frc_assignment(M_WORKERS, 2)
+    masks = np.random.default_rng(2).random((32, A.m)) >= 0.4
+    W, alphas = sw.batched_step_weights(A, masks)
+    for t in range(masks.shape[0]):
+        res = optimal_decode_frc(A, masks[t])
+        np.testing.assert_allclose(W[t], res.w, atol=1e-12)
+        np.testing.assert_allclose(alphas[t], res.alpha, atol=1e-12)
+
+
+def test_fixed_decoding_runtime_unit_scale():
+    rt = _runtime(decoding="fixed", straggler_p=0.2, seed=5)
+    assert rt.scale == 1.0  # fixed weights are unbiased by construction
+    w, alive = rt.step_weights()
+    d = rt.assignment.replication_factor
+    np.testing.assert_allclose(w[alive], 1.0 / (d * 0.8), rtol=1e-6)

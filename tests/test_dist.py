@@ -7,11 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "repro.dist",
-    reason="repro.dist (shard_map runtime) is not present in this "
-           "checkout -- tracked as a ROADMAP open item")
-
 from repro.configs import CodingConfig, get_config
 from repro.core import expander_assignment
 from repro.data.pipeline import CodedBatcher, SyntheticLM

@@ -96,8 +96,6 @@ def test_dryrun_machinery_tiny_mesh():
     1-device CPU mesh with a smoke config (the 512-device production
     dry-run runs via python -m repro.launch.dryrun)."""
     from repro.configs.base import ShapeSpec
-    pytest.importorskip(
-        "repro.dist", reason="shard_map runtime missing (ROADMAP item)")
     from repro.dist import coded_train
     from repro.launch import hlo_analysis, specs as specs_mod
     from repro.launch.mesh import make_test_mesh
@@ -122,9 +120,6 @@ def test_dryrun_machinery_tiny_mesh():
 
 
 def test_long_500k_skip_policy():
-    pytest.importorskip(
-        "repro.dist", reason="repro.launch.specs imports the missing "
-                             "shard_map runtime (ROADMAP item)")
     from repro.launch import specs as specs_mod
     ok, why = specs_mod.long_500k_supported(
         get_config("seamless-m4t-large-v2"))
