@@ -71,12 +71,19 @@ def main() -> None:
         report["mode"] = "fast" if fast else "full"
         with open(args.train_json, "w") as f:
             json.dump(report, f, indent=2)
-        runs = {r["scheme"]: r for r in report["runs"]}
-        print(f"wrote {args.train_json}: coded "
-              f"{runs['expander']['step_ms']:.1f} ms/step "
-              f"({runs['expander']['tokens_per_s']:.0f} tok/s, decode "
-              f"{runs['expander']['decode_us_per_step']:.0f} us) vs "
-              f"uncoded {runs['uncoded']['step_ms']:.1f} ms/step")
+        runs = report["runs"]
+        repl = train_step.find_run(runs, scheme="expander",
+                                   path="replicated",
+                                   collective="gspmd")
+        dedup = train_step.find_run(runs, scheme="expander",
+                                    path="dedup")
+        uncoded = train_step.find_run(runs, scheme="uncoded")
+        print(f"wrote {args.train_json}: coded dedup "
+              f"{dedup['step_ms']:.1f} ms/step "
+              f"({dedup['step_ms'] / uncoded['step_ms']:.2f}x uncoded) "
+              f"vs replicated {repl['step_ms']:.1f} ms/step "
+              f"({repl['step_ms'] / uncoded['step_ms']:.2f}x) vs "
+              f"uncoded {uncoded['step_ms']:.1f} ms/step")
 
     if args.only is not None and "decoding_error" not in wanted:
         # A filtered run of unrelated suites shouldn't pay for (or

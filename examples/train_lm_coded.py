@@ -1,6 +1,10 @@
 """End-to-end driver: coded training of a (reduced) assigned
 architecture on the virtual-device mesh, with live straggler sampling
-and O(m) optimal decoding each step. Wraps repro.launch.train.
+and O(m) optimal decoding. Wraps repro.launch.train with its async
+pipeline defaults: deduplicated block execution (each unique block
+once, weighted by v = A @ w), lookahead-batched decoding, and
+metrics buffered on device between log intervals. Pass --no-dedup /
+--collective manual to see the replicated-cluster simulation instead.
 
     PYTHONPATH=src python examples/train_lm_coded.py [--arch ...]
 """
@@ -16,6 +20,7 @@ def main():
         "--seq-len", "48", "--block-size", "2", "--lr", "1e-3",
         "--straggler-p", "0.2", "--scheme", "expander",
         "--decoding", "optimal", "--replication", "2",
+        "--dedup", "--lookahead", "10", "--log-every", "5",
     ]
     train.main(argv)
 

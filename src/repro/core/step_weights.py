@@ -14,6 +14,8 @@ each grew their own copy of parts of that pipeline; this is the single
 - per-mask machine weights w* (``step_weights``) and the batched form
   (``batched_step_weights``) -- there is deliberately no third decoder
   implementation here, only dispatch onto the existing ones,
+- the per-block combine weights v = A @ w (``block_weights``, scalar
+  and batched) -- the dedup train path's view of the same decode,
 - the Monte-Carlo debias scale (``debias_scale_mc``), computed by one
   ``batched_alpha`` call over a shared-uniform Bernoulli batch (the
   sweep engine's sampling protocol).
@@ -87,6 +89,34 @@ def step_weights(assignment: Assignment, alive: np.ndarray, *,
     """
     res = decode(assignment, alive, method=method, p=p)
     return res.w * scale, res.alpha * scale
+
+
+def block_weights(assignment: Assignment, w: np.ndarray) -> np.ndarray:
+    """Per-block combine weights v = A @ w from machine weights w.
+
+    The paper combine ``sum_j w_j g_j`` over the m machines is
+    algebraically the per-block form ``sum_i (A w)_i grad L_i`` over
+    the n *unique* blocks (machine j's gradient is the sum of its
+    assigned blocks' gradients), so v is everything the deduplicated
+    train path (``repro.dist.coded_train.coded_loss_fn_dedup``) needs:
+    it never recomputes a replicated block. For decoder outputs v is
+    exactly the decoder's alpha -- exposed here as a first-class output
+    rather than an ad-hoc ``assignment.A @ w`` at every call site.
+
+    Accepts a scalar (m,) weight vector -> (n,), or a batched (T, m)
+    stack -> (T, n).
+    """
+    w = np.asarray(w)
+    if w.ndim == 1:
+        if w.shape[0] != assignment.m:
+            raise ValueError(f"w must be ({assignment.m},), got {w.shape}")
+        return assignment.A @ w
+    if w.ndim == 2:
+        if w.shape[1] != assignment.m:
+            raise ValueError(f"W must be (T, {assignment.m}), "
+                             f"got {w.shape}")
+        return w @ assignment.A.T
+    raise ValueError(f"w must be (m,) or (T, m), got ndim={w.ndim}")
 
 
 def batched_step_weights(assignment: Assignment, masks, *,

@@ -6,7 +6,9 @@ shuffled by the per-run permutation rho (Algorithm 2's unbiasedness
 trick), and each of the m coded workers receives the concatenation of
 its assigned blocks (two, for graph schemes). The emitted ``coded
 batch`` has a leading machine axis of size m that the distributed
-runtime shards over the (pod, data) mesh axes.
+runtime shards over the (pod, data) mesh axes; ``unique_blocks`` is
+the deduplicated view of the same partition (one row per block, no
+replication) for the mesh-reproduction train path.
 """
 
 from __future__ import annotations
@@ -94,6 +96,28 @@ class CodedBatcher:
             blocks = blocks[self.rho]          # rho shuffle
             out[k] = blocks[self.block_ids]    # (m, load, bs, ...)
         out["block_weight"] = self.block_mask  # (m, load)
+        return out
+
+    def unique_blocks(self, batch: Dict[str, np.ndarray]
+                      ) -> Dict[str, np.ndarray]:
+        """Dedup emitter: global batch -> (n, block_rows, ...) unique
+        blocks after the rho shuffle -- the same data ``code_batch``
+        replicates onto machines, emitted once per block. Row i here is
+        the data block the assignment's block id i carries, so the
+        per-block weights ``v = A @ w``
+        (``core.step_weights.block_weights``) line up by construction
+        and ``sum_i v_i grad L_i`` equals the replicated machine
+        combine without the d-fold recompute.
+        """
+        n = self.assignment.n
+        out = {}
+        for k, v in batch.items():
+            gb = v.shape[0]
+            if gb % n:
+                raise ValueError(f"global batch {gb} not divisible by "
+                                 f"n={n} blocks")
+            bs = gb // n
+            out[k] = v.reshape((n, bs) + v.shape[1:])[self.rho]
         return out
 
 

@@ -19,6 +19,34 @@ data-sharded and GSPMD inserts the psum; ``coded_allreduce`` is the
 same combine as an explicit ``shard_map`` collective for runs that
 want manual control over the reduction.
 
+Two execution models, one algebra
+---------------------------------
+
+The module offers the paper's update in two equivalent forms; picking
+between them is picking what the mesh is *simulating*:
+
+* **Replicated-machine** (``coded_loss_fn``): the batch carries the
+  (m, load, ...) machine axis with every block materialised d times,
+  exactly as a real straggling cluster would compute it -- machine j
+  really does redo block i's forward/backward. This is the right model
+  when the mesh shards *are* the m unreliable workers (a real cluster,
+  or fault-injection studies where per-machine compute matters).
+* **Dedup-block** (``coded_loss_fn_dedup``): for a *reproduction* on a
+  reliable mesh, the d-fold replication is a coding-layer fact, not a
+  compute obligation. The combine ``sum_j w_j g_j`` is algebraically
+  ``sum_i (A w)_i grad L_i`` over the n unique blocks (machine j's
+  gradient is the sum of its blocks' gradients -- the same identity
+  Charles et al. use to analyse the decoded gradient), so the step
+  runs each block once, weighted by ``v = A @ w``
+  (``core.step_weights.block_weights``), at ~1x the uncoded FLOPs
+  instead of ~d x. Gradients, optimizer updates and loss trajectories
+  match the replicated path to float32 tolerance
+  (tests/test_dedup.py); only the wall-clock differs.
+
+``coded_allreduce`` / ``make_manual_train_step`` keep the combine as
+an explicit shard_map psum for runs that want manual control over the
+reduction instead of the GSPMD-inserted one.
+
 Host side, ``CodingRuntime`` bridges ``repro.core``'s oracle into the
 training loop: it instantiates the assignment (expander / FRC /
 uncoded), samples one of the ``core.stragglers`` processes each step,
@@ -26,7 +54,10 @@ and emits per-step w* through the shared
 ``core.step_weights`` pipeline (decode dispatch + alpha-bar debias via
 the batched engine), memoising repeated masks -- stagnant stragglers
 (the paper's cluster observation, the Markov model here) make the
-decode cache hit almost every step.
+decode cache hit almost every step. ``weights_lookahead`` pre-samples
+a horizon of masks and decodes the novel ones in one
+``decode_batch`` call, for pipelined loops that refuse even the
+per-step cache-lookup latency.
 """
 
 from __future__ import annotations
@@ -80,8 +111,43 @@ def coded_loss_fn(params, coded_batch: Dict[str, jnp.ndarray],
     return (w[:, None] * bw * per_block).sum() / norm
 
 
+def coded_loss_fn_dedup(params, block_batch: Dict[str, jnp.ndarray],
+                        v: jnp.ndarray, cfg: ModelConfig,
+                        norm_scale: float = 1.0) -> jnp.ndarray:
+    """Per-unique-block weighted coded loss; grad == sum_j w_j g_j.
+
+    block_batch leaves are (n, block_rows, ...) unique blocks
+    (``CodedBatcher.unique_blocks``); v is the (n,) per-block weights
+    ``A @ w`` (``core.step_weights.block_weights``). Since the
+    replicated combine is ``sum_j w_j sum_l bw_jl L_jl = sum_i v_i
+    L_i``, this computes the identical loss/gradient from one forward
+    pass per block -- ~1x the uncoded FLOPs instead of ~d x.
+
+    ``norm_scale`` reproduces the replicated path's normalisation: the
+    replicated batch counts m*load block slots of labels (padding
+    included), the dedup batch counts n, so passing
+    ``dedup_norm_scale(assignment) = m*load/n`` makes losses (not just
+    gradients-up-to-scale) match ``coded_loss_fn`` exactly.
+    """
+    labels = block_batch["labels"]
+    n = labels.shape[0]
+    flat = {k: x.reshape((-1,) + x.shape[2:])
+            for k, x in block_batch.items()}
+    per_seq = M.train_loss(params, flat, cfg, per_example=True)
+    per_block = per_seq.reshape(n, -1).sum(axis=1)   # (n,)
+    norm = labels.size * norm_scale
+    return (v * per_block).sum() / norm
+
+
+def dedup_norm_scale(assignment: Assignment) -> float:
+    """m*load/n: the factor that aligns the dedup loss normalisation
+    with the replicated batch's (padded) label count."""
+    return assignment.m * assignment.load / assignment.n
+
+
 def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
-                    n_microbatches: int = 1):
+                    n_microbatches: int = 1, *, dedup: bool = False,
+                    norm_scale: float = 1.0, alpha_weights=None):
     """(params, opt_state, coded_batch, w) -> (params, opt_state,
     metrics).
 
@@ -94,36 +160,58 @@ def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
     the standard higher-precision accumulator if params ever go bf16
     (where the single-shot step would differ by the grads' bf16
     rounding, not by this sum).
+
+    ``dedup=True`` builds the deduplicated-block step instead: the
+    batch is ``CodedBatcher.unique_blocks`` output and ``w`` is the
+    per-block ``v = A @ w`` (pass ``norm_scale=dedup_norm_scale(A)``
+    to keep loss values aligned with the replicated path).
+
+    Metrics stay on device so pipelined loops never block on them:
+    ``alpha_bar`` (the debias divisor the driver used to fetch as a
+    host-side ``A @ w`` every step) is folded into the metrics dict --
+    ``mean(v)`` directly on the dedup path, ``(colsum(A)/n) . w`` via
+    ``alpha_weights`` on the replicated one (omitted if None).
     """
     nm = int(n_microbatches)
     if nm < 1:
         raise ValueError("n_microbatches must be >= 1")
+    aw = (None if alpha_weights is None
+          else jnp.asarray(alpha_weights, jnp.float32))
+
+    def loss_fn(p, b, wv):
+        if dedup:
+            return coded_loss_fn_dedup(p, b, wv, cfg,
+                                       norm_scale=norm_scale)
+        return coded_loss_fn(p, b, wv, cfg)
 
     def step(params, opt_state, batch, w):
         if nm == 1:
-            loss, grads = jax.value_and_grad(coded_loss_fn)(
-                params, batch, w, cfg)
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, w)
         else:
-            bw = batch["block_weight"]
+            # microbatch split along the per-block batch axis:
+            # replicated leaves are (m, load, bs, ...), dedup (n, bs, ...)
+            bax = 1 if dedup else 2
+            bw = None if dedup else batch["block_weight"]
 
             def to_micro(leaf):
-                m_, l_, bs_ = leaf.shape[:3]
+                bs_ = leaf.shape[bax]
                 if bs_ % nm:
                     raise ValueError(
                         f"block batch {bs_} not divisible by "
                         f"{nm} microbatches")
-                x = leaf.reshape((m_, l_, nm, bs_ // nm) + leaf.shape[3:])
-                return jnp.moveaxis(x, 2, 0)   # (nm, m, load, bs/nm, ...)
+                x = leaf.reshape(leaf.shape[:bax] + (nm, bs_ // nm)
+                                 + leaf.shape[bax + 1:])
+                return jnp.moveaxis(x, bax, 0)
 
             micro = {k: to_micro(v) for k, v in batch.items()
                      if k != "block_weight"}
 
             def body(carry, mb):
                 g_acc, l_acc = carry
-                mb = dict(mb)
-                mb["block_weight"] = bw
-                l, g = jax.value_and_grad(coded_loss_fn)(params, mb, w,
-                                                         cfg)
+                if bw is not None:
+                    mb = dict(mb)
+                    mb["block_weight"] = bw
+                l, g = jax.value_and_grad(loss_fn)(params, mb, w)
                 return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
 
             zeros = jax.tree.map(
@@ -136,6 +224,10 @@ def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
         params = opt_mod.apply_updates(params, updates)
         metrics = {"loss": loss,
                    "grad_norm": opt_mod.global_norm(grads)}
+        if dedup:
+            metrics["alpha_bar"] = w.mean()
+        elif aw is not None:
+            metrics["alpha_bar"] = jnp.dot(aw, w)
         return params, opt_state, metrics
 
     return step
@@ -179,6 +271,64 @@ def coded_allreduce(grads, w: jnp.ndarray, mesh):
                      in_specs=(gspecs, P(lead)),
                      out_specs=jax.tree.map(lambda _: P(), grads))(
         grads, w)
+
+
+def alpha_bar_weights(assignment: Assignment) -> np.ndarray:
+    """(m,) vector a with a . w == mean(A @ w): the on-device form of
+    the alpha-bar debias divisor (colsum(A)/n), so train steps can
+    report it in metrics instead of the driver syncing ``A @ w`` to
+    the host every step."""
+    return (assignment.A.sum(axis=0) / assignment.n).astype(np.float32)
+
+
+def make_manual_collective_train_step(cfg: ModelConfig,
+                                      optimizer: opt_mod.Optimizer,
+                                      mesh, alpha_weights=None):
+    """Replicated-path train step whose combine is the explicit
+    ``coded_allreduce`` shard_map psum instead of the GSPMD-inserted
+    one (the ROADMAP manual-vs-gspmd comparison).
+
+    Unlike ``make_train_step`` -- where autodiff of the w-weighted
+    loss fuses the per-machine gradients into one backward pass -- the
+    manual route must materialise what the collective reduces: per-
+    machine gradients g_j via a vmapped value_and_grad over the
+    machine axis (same backward FLOPs, m x the gradient memory), then
+    ``sum_j w_j g_j`` as coded_combine + psum over the worker axes.
+    That makes it the fidelity-first option (the reduction is
+    inspectable and the per-machine g_j exist as tensors, as on a real
+    cluster), not the fast one; ``benchmarks/train_step.py`` carries a
+    ``collective: manual`` row tracking exactly what that costs.
+    """
+    aw = (None if alpha_weights is None
+          else jnp.asarray(alpha_weights, jnp.float32))
+
+    def step(params, opt_state, batch, w):
+        bw = batch["block_weight"]
+        load = bw.shape[1]
+        norm = batch["labels"].size
+
+        def machine_loss(p, mb, bw_j):
+            flat = {k: x.reshape((-1,) + x.shape[2:])
+                    for k, x in mb.items()}
+            per_seq = M.train_loss(p, flat, cfg, per_example=True)
+            per_block = per_seq.reshape(load, -1).sum(axis=1)
+            return (bw_j * per_block).sum() / norm
+
+        data = {k: v for k, v in batch.items() if k != "block_weight"}
+        losses, grads = jax.vmap(
+            lambda mb, bw_j: jax.value_and_grad(machine_loss)(
+                params, mb, bw_j))(data, bw)
+        grads = coded_allreduce(grads, w, mesh)   # (m, ...) -> combine
+        loss = (w * losses).sum()
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_mod.apply_updates(params, updates)
+        metrics = {"loss": loss,
+                   "grad_norm": opt_mod.global_norm(grads)}
+        if aw is not None:
+            metrics["alpha_bar"] = jnp.dot(aw, w)
+        return params, opt_state, metrics
+
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -282,3 +432,45 @@ class CodingRuntime:
         return sw.batched_step_weights(
             self.assignment, masks, method=self.coding.decoding,
             p=self.coding.straggler_p, scale=self.scale)
+
+    def block_weights(self, w: np.ndarray) -> np.ndarray:
+        """Machine weights -> per-block v = A @ w for the dedup step."""
+        return sw.block_weights(self.assignment, w).astype(np.float32)
+
+    def weights_lookahead(self, horizon: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pre-sample the next ``horizon`` rounds and decode them in
+        one ``decode_batch`` call: returns (W (horizon, m) float32,
+        alive (horizon, m) bool).
+
+        Consumes the same RNG stream as ``step_weights``, one sample
+        per round, so a lookahead loop sees bit-identical masks and
+        weights to a per-step loop over the same seed (pinned in
+        tests/test_coding_runtime.py). The chunk is deduplicated
+        against the memo cache first -- under stagnant processes the
+        whole horizon is usually a single novel decode (or none).
+        """
+        if horizon < 1:
+            raise ValueError("horizon must be >= 1")
+        alive = np.stack(
+            [self.model.sample(self.rng) for _ in range(horizon)])
+        self.steps_sampled += horizon
+        keys = [a.tobytes() for a in alive]
+        # Gather this horizon's rows locally: FIFO eviction while
+        # inserting novel decodes must not drop an entry the horizon
+        # itself still references.
+        w_by_key = {k: self._cache[k] for k in keys if k in self._cache}
+        novel = {}   # mask bytes -> row in the batched decode
+        for t, k in enumerate(keys):
+            if k not in w_by_key and k not in novel:
+                novel[k] = t
+        if novel:
+            W_new, _ = self.decode_batch(alive[sorted(novel.values())])
+            self.decode_calls += len(novel)
+            for k, w_new in zip(sorted(novel, key=novel.get), W_new):
+                w_by_key[k] = w_new.astype(np.float32)
+                if len(self._cache) >= self.cache_size:
+                    self._cache.pop(next(iter(self._cache)))
+                self._cache[k] = w_by_key[k]
+        W = np.stack([w_by_key[k] for k in keys])
+        return W, alive

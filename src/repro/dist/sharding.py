@@ -41,16 +41,45 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def _worker_count(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= int(mesh.shape[a])
+    return n
+
+
+def _leading_axis_shardings(mesh: Mesh, batch, *, divisible: bool):
+    """Leaf leading axis over the worker axes, the rest replicated;
+    with ``divisible`` a leading dim that does not divide the worker
+    count falls back to full replication instead of an invalid spec."""
+    da = data_axes(mesh)
+    da1 = da if len(da) > 1 else da[0]
+    n_workers = _worker_count(mesh)
+
+    def spec(v) -> NamedSharding:
+        if divisible and (v.ndim == 0 or v.shape[0] % n_workers):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([da1] + [None] * (v.ndim - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
 def batch_shardings(mesh: Mesh, batch):
     """Coded-batch shardings: every leaf's leading (machine) axis over
     the worker axes, the rest replicated. Works on arrays and
     ShapeDtypeStructs; the single source the train driver and the
     train-step benchmark both jit against."""
-    da = data_axes(mesh)
-    da1 = da if len(da) > 1 else da[0]
-    return jax.tree.map(
-        lambda v: NamedSharding(
-            mesh, P(*([da1] + [None] * (v.ndim - 1)))), batch)
+    return _leading_axis_shardings(mesh, batch, divisible=False)
+
+
+def block_shardings(mesh: Mesh, batch):
+    """Dedup unique-block batch shardings: the leading n-block axis
+    over the worker (pod, data) axes -- the same placement the
+    replicated batch's machine axis gets -- with a divisibility
+    fallback to replication for block counts that do not divide the
+    worker count (FRC / irregular dedup batches on wide meshes, or the
+    1-device test mesh)."""
+    return _leading_axis_shardings(mesh, batch, divisible=True)
 
 
 def _model_size(mesh: Mesh) -> int:
@@ -118,9 +147,7 @@ def cache_specs(cache, mesh: Mesh, *, batch_replicated: bool = False):
     unstacked encoder output), replicate when the batch is smaller than
     the worker count (``batch_replicated``) or does not divide it."""
     da = data_axes(mesh)
-    n_data = 1
-    for a in da:
-        n_data *= int(mesh.shape[a])
+    n_data = _worker_count(mesh)
     da1 = da if len(da) > 1 else da[0]
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
 

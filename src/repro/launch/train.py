@@ -7,9 +7,24 @@ if "XLA_FLAGS" not in os.environ:
 
 Runs REAL training (not a dry-run): synthetic LM corpus -> coded block
 partitioner -> shard_map/pjit coded train step with host-side straggler
-sampling + O(m) optimal decoding each step. On CPU it uses the reduced
-smoke configs and a (4, 2) mesh of virtual devices; on a TPU pod the
-same driver takes the full configs and the production mesh.
+sampling + O(m) optimal decoding. On CPU it uses the reduced smoke
+configs and a (4, 2) mesh of virtual devices; on a TPU pod the same
+driver takes the full configs and the production mesh.
+
+The loop is an async pipeline: shardings and the jitted step are built
+once up front (shapes are static across steps), host batch construction
+is double-buffered against device compute on a worker thread, straggler
+masks are pre-sampled and decoded ``--lookahead`` rounds at a time
+through one ``CodingRuntime.weights_lookahead`` call, and metrics stay
+on device (alpha-bar included) until a ``--log-every`` boundary -- the
+host never blocks on the device inside the steady-state loop.
+
+Execution path: ``--dedup`` (default) runs every unique block once,
+weighted by v = A @ w (~1x uncoded FLOPs); ``--no-dedup`` materialises
+the replicated (m, load, ...) machine batch, the faithful simulation of
+a real straggling cluster; ``--collective manual`` additionally routes
+the combine through the explicit ``coded_allreduce`` shard_map psum
+(replicated path only).
 
   python -m repro.launch.train --arch qwen1.5-4b --steps 20 \
       --straggler-p 0.2 --scheme expander --decoding optimal
@@ -18,6 +33,7 @@ same driver takes the full configs and the production mesh.
 import argparse
 import json
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +63,23 @@ def main(argv=None) -> dict:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--block-size", type=int, default=4)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--dedup", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="run each unique block once, weighted by "
+                         "v = A @ w; on by default under --collective "
+                         "gspmd (--no-dedup: replicate blocks onto "
+                         "machines as a real cluster would)")
+    ap.add_argument("--collective", default="gspmd",
+                    choices=("gspmd", "manual"),
+                    help="gradient combine: GSPMD-inserted psum vs the "
+                         "explicit coded_allreduce shard_map (manual "
+                         "implies the replicated path)")
+    ap.add_argument("--lookahead", type=int, default=8,
+                    help="straggler rounds pre-sampled and decoded per "
+                         "batched decode_batch call")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="steps between host metric fetches "
+                         "(0: steps // 10)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full architecture (TPU pods)")
     ap.add_argument("--production-mesh", action="store_true")
@@ -54,6 +87,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.collective == "manual" and args.microbatches != 1:
+        ap.error("--microbatches is only supported with "
+                 "--collective gspmd")
+    if args.collective == "manual" and args.dedup:
+        # The manual collective reduces the per-machine gradients the
+        # replicated batch produces; dedup has no machine axis.
+        ap.error("--dedup is only supported with --collective gspmd")
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -66,18 +106,26 @@ def main(argv=None) -> dict:
         model_par = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
         mesh = make_test_mesh((n_dev // model_par, model_par))
 
+    dedup = args.collective == "gspmd" and args.dedup is not False
+
     m_workers = mesh.shape["data"] * mesh.shape.get("pod", 1)
     coding = CodingConfig(
         scheme=args.scheme, replication=args.replication,
         decoding=args.decoding, straggler_model=args.straggler_model,
         straggler_p=args.straggler_p, seed=args.seed)
     runtime = coded_train.CodingRuntime(coding, m_workers)
-    n_blocks = runtime.assignment.n
-    load = runtime.assignment.load
+    assignment = runtime.assignment
+    n_blocks = assignment.n
     global_batch = n_blocks * args.block_size
+    lookahead = max(1, args.lookahead)
+    log_every = args.log_every or max(1, args.steps // 10)
 
     source = SyntheticLM(cfg.vocab_size, args.seq_len, seed=args.seed)
-    batcher = CodedBatcher(runtime.assignment, shuffle_seed=args.seed)
+    batcher = CodedBatcher(assignment, shuffle_seed=args.seed)
+    emit = batcher.unique_blocks if dedup else batcher.code_batch
+
+    def host_batch(step: int):
+        return emit(source.batch(global_batch, step))
 
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
@@ -95,42 +143,77 @@ def main(argv=None) -> dict:
     repl = rules.replicated(mesh)
     oshard = {"step": repl, "m": pshard, "v": pshard}
 
-    train_step = coded_train.make_train_step(
-        cfg, optimizer, n_microbatches=args.microbatches)
+    alpha_w = coded_train.alpha_bar_weights(assignment)
+    if args.collective == "manual":
+        train_step = coded_train.make_manual_collective_train_step(
+            cfg, optimizer, mesh, alpha_weights=alpha_w)
+    else:
+        train_step = coded_train.make_train_step(
+            cfg, optimizer, n_microbatches=args.microbatches,
+            dedup=dedup,
+            norm_scale=coded_train.dedup_norm_scale(assignment),
+            alpha_weights=alpha_w)
 
-    losses = []
-    with mesh:
+    with mesh, ThreadPoolExecutor(max_workers=1) as pool:
         params = jax.device_put(params, pshard)
         opt_state = jax.device_put(opt_state, oshard)
-        step_fn = None
+        # Shapes are static across steps: build shardings and the
+        # jitted step once, from the first host batch.
+        batch_np = host_batch(0)
+        bshard = (rules.block_shardings if dedup
+                  else rules.batch_shardings)(mesh, batch_np)
+        step_fn = jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, bshard, repl),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1))
+
+        losses = []
+        metrics_hist = []          # device scalars, flushed at logs
+        W_chunk = alive_chunk = None
+        cursor = 0
+        pending = None
         t0 = time.time()
+
+        def flush_metrics():
+            # One bulk fetch of the buffered per-step scalars. The raw
+            # coded loss is scaled by each step's straggler draw
+            # (sum_i alpha_i varies); report the debiased estimate
+            # loss / alpha_bar so steps are comparable across draws.
+            for h in jax.device_get(metrics_hist):
+                losses.append(float(h["loss"])
+                              / max(float(h["alpha_bar"]), 1e-3))
+            metrics_hist.clear()
+
         for step in range(args.steps):
-            batch_np = batcher.code_batch(
-                source.batch(global_batch, step))
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            bshard = rules.batch_shardings(mesh, batch)
-            batch = {k: jax.device_put(v, bshard[k])
-                     for k, v in batch.items()}
-            w, alive = runtime.step_weights()
-            wv = jax.device_put(jnp.asarray(w), repl)
-            if step_fn is None:
-                step_fn = jax.jit(
-                    train_step,
-                    in_shardings=(pshard, oshard, bshard, repl),
-                    out_shardings=(pshard, oshard, None),
-                    donate_argnums=(0, 1))
+            if pending is not None:
+                batch_np = pending.result()
+            if step + 1 < args.steps:
+                # Double buffer: the worker thread builds step+1's
+                # batch while the device runs step's compute.
+                pending = pool.submit(host_batch, step + 1)
+            batch = {k: jax.device_put(jnp.asarray(v), bshard[k])
+                     for k, v in batch_np.items()}
+            if W_chunk is None or cursor == len(W_chunk):
+                W_chunk, alive_chunk = runtime.weights_lookahead(
+                    min(lookahead, args.steps - step))
+                cursor = 0
+            w, alive = W_chunk[cursor], alive_chunk[cursor]
+            cursor += 1
+            wv = runtime.block_weights(w) if dedup else w
+            wv = jax.device_put(jnp.asarray(wv, jnp.float32), repl)
             params, opt_state, metrics = step_fn(params, opt_state,
                                                  batch, wv)
-            # The raw coded loss is scaled by this step's straggler
-            # draw (sum_i alpha_i varies); report the debiased estimate
-            # loss / mean(alpha) so steps are comparable across draws.
-            alpha_bar = float((runtime.assignment.A @ w).mean())
-            losses.append(float(metrics["loss"]) / max(alpha_bar, 1e-3))
-            if step % max(1, args.steps // 10) == 0 or \
-                    step == args.steps - 1:
+            metrics_hist.append(metrics)
+            if step % log_every == 0 or step == args.steps - 1:
+                # The only host<->device syncs in the loop: one bulk
+                # fetch per log interval keeps the metrics buffer
+                # bounded by log_every on arbitrarily long runs.
+                flush_metrics()
                 print(f"step {step:4d} loss {losses[-1]:.4f} "
                       f"stragglers {int((~alive).sum())}/{m_workers} "
                       f"({time.time() - t0:.1f}s)")
+        flush_metrics()
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, jax.device_get(params), step=args.steps)
         print(f"saved checkpoint to {args.ckpt_dir}")
@@ -141,7 +224,10 @@ def main(argv=None) -> dict:
     assert last < first, f"loss did not decrease ({first:.3f}->{last:.3f})"
     print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1],
                       "steps": args.steps, "m_workers": m_workers,
-                      "scheme": args.scheme, "decoding": args.decoding}))
+                      "scheme": args.scheme, "decoding": args.decoding,
+                      "path": "dedup" if dedup else "replicated",
+                      "collective": args.collective,
+                      "decode_calls": runtime.decode_calls}))
     return {"losses": losses}
 
 

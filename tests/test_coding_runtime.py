@@ -91,6 +91,78 @@ def test_batched_step_weights_matches_scalar_frc():
         np.testing.assert_allclose(alphas[t], res.alpha, atol=1e-12)
 
 
+@pytest.mark.parametrize("model,decoding", [
+    ("bernoulli", "optimal"), ("markov", "optimal"),
+    ("bernoulli", "fixed")])
+def test_weights_lookahead_equals_per_step(model, decoding):
+    """The batched lookahead path must replay the per-step loop
+    bit-for-bit over a fixed mask stream: same RNG consumption, same
+    (cached) decodes, same float32 weights."""
+    steps = 24
+    rt_step = _runtime(straggler_model=model, decoding=decoding,
+                       straggler_p=0.3, seed=7)
+    rt_look = _runtime(straggler_model=model, decoding=decoding,
+                       straggler_p=0.3, seed=7)
+    per_w, per_alive = zip(*[rt_step.step_weights()
+                             for _ in range(steps)])
+    look_w, look_alive = [], []
+    done = 0
+    for horizon in (5, 11, steps):   # uneven chunks straddle the stream
+        k = min(horizon, steps - done)
+        W, alive = rt_look.weights_lookahead(k)
+        look_w.append(W)
+        look_alive.append(alive)
+        done += k
+    np.testing.assert_array_equal(np.stack(per_alive),
+                                  np.concatenate(look_alive))
+    np.testing.assert_array_equal(np.stack(per_w),
+                                  np.concatenate(look_w))
+    assert rt_look.steps_sampled == rt_step.steps_sampled == steps
+    # the chunked path dedups within the horizon too, so it never
+    # decodes more than the per-step memoised loop
+    assert rt_look.decode_calls <= rt_step.decode_calls
+
+
+def test_weights_lookahead_survives_cache_eviction():
+    """A horizon larger than the memo cache must not lose rows to FIFO
+    eviction mid-chunk: every returned weight row still matches a
+    fresh decode of its mask."""
+    rt = coded_train.CodingRuntime(
+        CodingConfig(scheme="expander", replication=2,
+                     straggler_p=0.5, seed=11),
+        m=M_WORKERS, cache_size=4)
+    W, alive = rt.weights_lookahead(32)  # >> cache_size distinct masks
+    W_fresh, _ = rt.decode_batch(alive)
+    np.testing.assert_array_equal(W, W_fresh.astype(np.float32))
+
+
+def test_weights_lookahead_dedups_stagnant_masks():
+    rt = _runtime(straggler_model="adversarial", straggler_p=0.25)
+    W, alive = rt.weights_lookahead(16)
+    assert W.shape == (16, M_WORKERS)
+    assert rt.decode_calls == 1  # the adversarial mask never moves
+    assert (W[~alive] == 0).all()
+    with pytest.raises(ValueError):
+        rt.weights_lookahead(0)
+
+
+def test_block_weights_scalar_and_batched():
+    A = expander_assignment(M_WORKERS, 2, vertex_transitive=True, seed=0)
+    rng = np.random.default_rng(3)
+    W = rng.random((5, A.m))
+    np.testing.assert_allclose(sw.block_weights(A, W), W @ A.A.T)
+    for t in range(5):
+        np.testing.assert_allclose(sw.block_weights(A, W[t]),
+                                   A.A @ W[t])
+    # decoder outputs: block weights ARE the decoder's alpha
+    masks = rng.random((8, A.m)) >= 0.3
+    Wd, alphas = sw.batched_step_weights(A, masks)
+    np.testing.assert_allclose(sw.block_weights(A, Wd), alphas,
+                               atol=1e-12)
+    with pytest.raises(ValueError):
+        sw.block_weights(A, np.ones(A.m + 1))
+
+
 def test_fixed_decoding_runtime_unit_scale():
     rt = _runtime(decoding="fixed", straggler_p=0.2, seed=5)
     assert rt.scale == 1.0  # fixed weights are unbiased by construction

@@ -5,8 +5,11 @@ Runs as a subprocess because the virtual-device count must enter
 XLA_FLAGS before jax initialises (conftest keeps the test process on
 the real 1-CPU device by design). The driver itself asserts the
 decreasing window-mean loss and prints a JSON summary line; this test
-checks the exit status and the summary. The longer variants stay
-behind --runslow in test_system.py.
+checks the exit status and the summary. Two runs keep both execution
+paths in tier-1: the async dedup pipeline (lookahead decoding,
+buffered metrics) and the replicated path through the manual
+``coded_allreduce`` collective. The longer variants stay behind
+--runslow in test_system.py.
 """
 
 import json
@@ -19,7 +22,7 @@ import numpy as np
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def test_train_driver_smoke_virtual_mesh():
+def _run_driver(*extra):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -27,15 +30,36 @@ def test_train_driver_smoke_virtual_mesh():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.train",
          "--arch", "qwen1.5-4b", "--steps", "12", "--seq-len", "32",
-         "--block-size", "2", "--straggler-p", "0.2"],
+         "--block-size", "2", "--straggler-p", "0.2", *extra],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=420)
     assert proc.returncode == 0, proc.stdout + proc.stderr
-    summary = json.loads(proc.stdout.strip().splitlines()[-1])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_train_driver_smoke_async_dedup_pipeline():
+    summary = _run_driver("--dedup", "--lookahead", "6",
+                          "--log-every", "4")
     assert summary["steps"] == 12
     assert summary["m_workers"] == 4  # (4, 2) mesh over 8 virtual devices
+    assert summary["path"] == "dedup"
+    assert summary["collective"] == "gspmd"
+    # decode memoisation sanity: at most one decode per sampled mask
+    # (the lookahead-vs-per-step batching itself is pinned in
+    # tests/test_coding_runtime.py)
+    assert summary["decode_calls"] <= 12
     assert np.isfinite(summary["first_loss"])
     assert np.isfinite(summary["last_loss"])
     # the window-mean decrease is asserted inside train.main; reaching
     # the summary line means the full coded path (batcher -> decode ->
     # sharded step) ran and learned
+    assert summary["last_loss"] < summary["first_loss"] + 1.0
+
+
+def test_train_driver_smoke_manual_collective():
+    summary = _run_driver("--collective", "manual", "--lookahead", "4",
+                          "--log-every", "6")
+    assert summary["steps"] == 12
+    assert summary["path"] == "replicated"  # manual implies replicated
+    assert summary["collective"] == "manual"
+    assert np.isfinite(summary["last_loss"])
     assert summary["last_loss"] < summary["first_loss"] + 1.0
