@@ -10,11 +10,12 @@ assignment; optimal decoding at m=24, fixed at m=6552 as in the paper),
 and the FRC optimum p^d/(1-p^d) plotted in closed form (the paper does
 the same).
 
-Each scheme's whole p-grid runs through ``sweep_error`` (shared
-uniforms, warm-started labels, matrix-free covariance norm at the LPS
-scale); per-point values are bit-identical to the historical
-``monte_carlo_error``-per-p loop, which ``sweep_report`` verifies and
-times for BENCH_sweep.json.
+Each regime's whole cross-scheme p-grid now runs through ONE
+``sweep_campaign`` call (shared uniforms per machine count, stacked
+fixed-decode GEMM, warm-started labels, blocked-Lanczos covariance
+norms at the LPS scale); per-(scheme, p) values are bit-identical to
+per-scheme ``sweep_error`` / per-point ``monte_carlo_error`` calls,
+which ``sweep_report`` verifies and times for BENCH_sweep.json.
 """
 
 from __future__ import annotations
@@ -26,7 +27,7 @@ import numpy as np
 
 from repro.core import (adjacency_assignment, decode, expander_assignment,
                         monte_carlo_error, random_regular_graph, spectral,
-                        sweep_error, theory)
+                        sweep_campaign, sweep_error, theory)
 
 P_GRID = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3)
 
@@ -35,11 +36,12 @@ def regime1(trials: int = 200, seed: int = 0) -> List[Dict]:
     A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
     adj = adjacency_assignment(random_regular_graph(24, 3, seed=2),
                                name="expander[6]")
-    opt = sweep_error(A, P_GRID, trials=trials, method="optimal",
-                      seed=seed)
-    fix = sweep_error(A, P_GRID, trials=trials, method="fixed", seed=seed)
-    exp6 = sweep_error(adj, P_GRID, trials=trials, method="optimal",
-                       seed=seed)
+    camp = sweep_campaign(
+        [(A, "optimal"), (A, "fixed"), (adj, "optimal")], P_GRID,
+        trials=trials, seed=seed)
+    opt = camp[f"{A.name}:optimal"]
+    fix = camp[f"{A.name}:fixed"]
+    exp6 = camp["expander[6]:optimal"]
     rows = []
     for i, p in enumerate(P_GRID):
         rows.append({
@@ -58,9 +60,10 @@ def regime1(trials: int = 200, seed: int = 0) -> List[Dict]:
 
 def regime2(trials: int = 30, seed: int = 0) -> List[Dict]:
     A = expander_assignment(6552, 6, vertex_transitive=True, seed=0)
-    opt = sweep_error(A, P_GRID, trials=trials, method="optimal",
-                      seed=seed)
-    fix = sweep_error(A, P_GRID, trials=trials, method="fixed", seed=seed)
+    camp = sweep_campaign([(A, "optimal"), (A, "fixed")], P_GRID,
+                          trials=trials, seed=seed)
+    opt = camp[f"{A.name}:optimal"]
+    fix = camp[f"{A.name}:fixed"]
     rows = []
     for i, p in enumerate(P_GRID):
         rows.append({
@@ -138,8 +141,13 @@ def sweep_report() -> Dict:
     contract inline: mean/std bit-identical to the per-point loop,
     covariance norms within 1e-6 relative of the dense SVD. Also times
     the spectral primitives at the same scale (dense vs matrix-free
-    |Cov|_2; dense vs Lanczos lambda_2 of the LPS graph; the FFT
-    circulant spectrum the best-of-20 expander search now uses).
+    |Cov|_2, per-slice vs blocked lockstep Lanczos; dense vs Lanczos
+    lambda_2 of the LPS graph; the FFT circulant spectrum the
+    best-of-20 expander search now uses), and the multi-scheme
+    ``sweep_campaign`` against the sequential per-scheme
+    ``sweep_error`` loop on the same grid -- with its own inline
+    acceptance: bit-identical mean/std, cov within tolerance, and a
+    >= 1.25x hard speedup floor (measured ~1.6-2.0x).
     """
     m, d, trials = 6552, 6, 30
     A = expander_assignment(m, d, vertex_transitive=True, seed=0)
@@ -201,6 +209,60 @@ def sweep_report() -> Dict:
     spectral.circulant_spectrum(n, tuple(range(1, d // 2 + 1)))
     fft_s = time.perf_counter() - t0
 
+    # Blocked-Lanczos primitive at the campaign's stacked scale: all
+    # S*P = 12 regime-2 covariance norms in one lockstep pass vs the
+    # per-slice Lanczos loop.
+    stack = rng.normal(loc=1.0, scale=0.05, size=(12, trials, n))
+    t0 = time.perf_counter()
+    per_slice = spectral.covariance_spectral_norm_batch(
+        stack, method="lanczos")
+    cov_loop_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    blocked = spectral.covariance_spectral_norm_batch(
+        stack, method="blocked")
+    cov_blocked_s = time.perf_counter() - t0
+    blocked_rel = float(np.max(np.abs(blocked - per_slice) /
+                               np.maximum(np.abs(per_slice), 1e-30)))
+
+    # Campaign vs the sequential per-scheme loop on the same Figure-3
+    # grid: one sweep_campaign (shared masks, stacked fixed GEMM,
+    # blocked cov) against sweep_error per scheme. Acceptance enforced
+    # inline (CI runs this via benchmarks.run): bit-identical mean/std
+    # per (scheme, p), cov within the matrix-free tolerance, and a real
+    # end-to-end speedup (>= 1.25 hard floor for CI noise; the
+    # committed report shows the measured ~1.8-1.9x).
+    entries = [(A, "optimal"), (A, "fixed")]
+    t0 = time.perf_counter()
+    seq = {f"{A.name}:{method}": sweep_error(
+        A, P_GRID, trials=trials, method=method, seed=0,
+        cov_method="lanczos") for _, method in entries}
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    camp = sweep_campaign(entries, P_GRID, trials=trials, seed=0,
+                          cov_method="blocked")
+    camp_s = time.perf_counter() - t0
+    camp_cov_rel = 0.0
+    for label, rows_seq in seq.items():
+        for r_c, r_s in zip(camp[label], rows_seq):
+            if r_c["mean_error"] != r_s["mean_error"] or \
+                    r_c["std_error"] != r_s["std_error"]:
+                raise AssertionError(
+                    f"campaign diverged from per-scheme sweep_error at "
+                    f"{label} p={r_s['p']}: {r_c} vs {r_s}")
+            camp_cov_rel = max(
+                camp_cov_rel,
+                abs(r_c["cov_norm"] - r_s["cov_norm"]) /
+                max(abs(r_s["cov_norm"]), 1e-30))
+    if camp_cov_rel > cov_tol:
+        raise AssertionError(
+            f"campaign blocked cov off by {camp_cov_rel:.3e} rel "
+            f"(> {cov_tol:g})")
+    campaign_speedup = seq_s / camp_s
+    if campaign_speedup < 1.25:
+        raise AssertionError(
+            f"campaign speedup {campaign_speedup:.2f}x < 1.25x over the "
+            f"sequential per-scheme loop ({seq_s:.3f}s vs {camp_s:.3f}s)")
+
     return {
         "regime2_grid": {
             "m": m, "d": d, "n": n, "graph": "LPS X^{5,13}",
@@ -211,11 +273,23 @@ def sweep_report() -> Dict:
             "bit_identical_mean_std": bit_identical,
             "cov_norm_max_rel_diff": cov_rel,
         },
+        "campaign": {
+            "schemes": list(seq),
+            "p_grid": list(P_GRID), "trials": trials,
+            "sequential_seconds": seq_s,
+            "campaign_seconds": camp_s,
+            "speedup": campaign_speedup,
+            "bit_identical_mean_std": True,  # enforced above
+            "cov_norm_max_rel_diff": camp_cov_rel,
+        },
         "spectral": {
             "cov_dense_svd_seconds": cov_dense_s,
             "cov_lanczos_seconds": cov_lanczos_s,
             "cov_rel_diff": abs(lanczos_norm - dense_norm) /
             max(abs(dense_norm), 1e-30),
+            "cov_batch12_lanczos_loop_seconds": cov_loop_s,
+            "cov_batch12_blocked_seconds": cov_blocked_s,
+            "cov_blocked_rel_diff": blocked_rel,
             "lambda2_dense_seconds": lam2_dense_s,
             "lambda2_lanczos_seconds": lam2_lanczos_s,
             "lambda2_abs_diff": abs(lam2_lanczos - lam2_dense),
@@ -223,7 +297,9 @@ def sweep_report() -> Dict:
         },
         "note": ("per_point = historical monte_carlo_error loop (dense "
                  "covariance SVD per p); sweep = sweep_error (shared "
-                 "uniforms, warm-started labels, matrix-free cov norm)"),
+                 "uniforms, warm-started labels, matrix-free cov norm); "
+                 "campaign = sweep_campaign over [optimal, fixed] vs "
+                 "the sequential per-scheme sweep_error loop"),
     }
 
 

@@ -2,26 +2,31 @@
 improves with the spectral expansion lambda at fixed replication d.
 Compare vertex-transitive graphs of equal d and n but different lambda:
 hypercube (lambda = 2) vs best-of random circulants vs random regular,
-plus the d=2 cycle as the degenerate case."""
+plus the d=2 cycle as the degenerate case. The whole cross-graph table
+is ONE ``sweep_campaign`` call (schemes of equal machine count share
+one straggler draw), and each row carries the leading covariance
+spectrum via the block-Lanczos ``covariance_topk`` path -- the
+beyond-the-norm view Thm IV.1's variance story motivates."""
 
 from __future__ import annotations
 
 import time
 from typing import Dict, List
 
-import numpy as np
-
-from repro.core import (cycle_graph, graph_assignment, hypercube_graph,
-                        random_regular_graph, sweep_error)
+from repro.core import (CampaignEntry, cycle_graph, graph_assignment,
+                        hypercube_graph, random_regular_graph,
+                        sweep_campaign)
 from repro.core.graphs import lps_like_cayley_expander
 
 
 def run(p: float = 0.3, trials: int = 300,
         backend: str = "auto") -> List[Dict]:
     """``backend`` selects the batched decoding engine ('numpy'/'jax'/
-    'auto'); every graph runs through one sweep-engine pass (a
-    single-point grid here), with lambda via the dispatching spectral
-    path (FFT for the cycle/circulant, dense for the small rest)."""
+    'auto'); all graphs run through one campaign pass (a single-point
+    grid here; equal-m graphs face identical straggler draws), with
+    lambda via the dispatching spectral path (FFT for the
+    cycle/circulant, dense for the small rest) and the top-3 covariance
+    spectrum from block Lanczos."""
     cases = [
         ("cycle_n64_d2", cycle_graph(64)),
         ("hypercube_d4", hypercube_graph(4)),              # n=16, lam=2
@@ -30,14 +35,17 @@ def run(p: float = 0.3, trials: int = 300,
         ("random_regular_n64_d4", random_regular_graph(64, 4, seed=0)),
         ("random_regular_n64_d6", random_regular_graph(64, 6, seed=0)),
     ]
+    entries = [CampaignEntry(graph_assignment(g, name=name), "optimal",
+                             label=name) for name, g in cases]
+    camp = sweep_campaign(entries, (p,), trials=trials, backend=backend,
+                          cov=False, cov_topk=3)
     rows = []
     for name, g in cases:
-        A = graph_assignment(g, name=name)
-        mc = sweep_error(A, (p,), trials=trials, method="optimal",
-                         backend=backend, cov=False)[0]
+        mc = camp[name][0]
         rows.append({"graph": name, "n": g.n, "d": g.replication_factor,
                      "lambda": g.spectral_expansion(), "p": p,
-                     "error": mc["mean_error"]})
+                     "error": mc["mean_error"],
+                     "cov_top3": [round(x, 6) for x in mc["cov_topk"]]})
     return rows
 
 

@@ -96,6 +96,16 @@ def main(fast: bool = False):
     rows.append(("spectral_matvec_gram_ref", us,
                  f"{gb / (us / 1e6):.1f}GB/s"))
 
+    # Lockstep/batched form (the campaign's blocked-Lanczos matvec):
+    # all B slices per call, at the regime-2 campaign stack size.
+    B = 12
+    xb = rng.normal(size=(B, R, k))
+    vb = rng.normal(size=(B, k))
+    us_b = _time(sm_ref.gram_matvec_batch, xb, vb, reps=20)
+    gb_b = 2 * xb.size * 8 / 1e9
+    rows.append(("spectral_matvec_gram_batch_ref", us_b,
+                 f"{gb_b / (us_b / 1e6):.1f}GB/s"))
+
     rows.extend(batched_alpha_rows(fast=fast))
 
     for name, us, derived in rows:

@@ -10,10 +10,12 @@ selected suites):
   straggler-decoding paths plus the batched_alpha kernel rows.
 * ``BENCH_sweep.json`` -- grid-seconds for the full regime-2 p-grid
   (6 p-points, cov on, trials=30 at m=6552): the historical per-p
-  ``monte_carlo_error`` loop vs the ``sweep_error`` engine, with the
-  bit-identity / 1e-6-cov acceptance checks inline, plus
-  spectral-norm timings (dense covariance SVD vs matrix-free Lanczos,
-  dense vs Lanczos graph lambda_2, FFT circulant spectrum).
+  ``monte_carlo_error`` loop vs the ``sweep_error`` engine, AND the
+  multi-scheme ``sweep_campaign`` vs the sequential per-scheme
+  ``sweep_error`` loop -- each with bit-identity / 1e-6-cov / speedup
+  acceptance checks inline -- plus spectral-norm timings (dense
+  covariance SVD vs matrix-free Lanczos, per-slice vs blocked lockstep
+  Lanczos, dense vs Lanczos graph lambda_2, FFT circulant spectrum).
 
 Both keep the perf trajectory trackable across PRs.
 """
@@ -122,6 +124,12 @@ def main() -> None:
           f"{grid['sweep_seconds']:.2f}s sweep ({grid['speedup']:.1f}x), "
           f"bit_identical={grid['bit_identical_mean_std']}, "
           f"cov_rel={grid['cov_norm_max_rel_diff']:.2e}")
+    camp = sweep["campaign"]
+    print(f"campaign {camp['campaign_seconds']:.2f}s vs sequential "
+          f"per-scheme loop {camp['sequential_seconds']:.2f}s "
+          f"({camp['speedup']:.2f}x), "
+          f"bit_identical={camp['bit_identical_mean_std']}, "
+          f"cov_rel={camp['cov_norm_max_rel_diff']:.2e}")
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 
 

@@ -22,10 +22,27 @@ def _flatten_with_paths(tree) -> Tuple[list, list]:
 
 
 def save(path: str, tree: Any, step: Optional[int] = None) -> str:
-    """Save pytree to ``path`` (directory). Returns the file written."""
+    """Save pytree to ``path`` (directory). Returns the file written.
+
+    Both files are written atomically (tmp + rename), and the .json
+    sidecar lands BEFORE the .npz: checkpoint discovery
+    (``saved_steps``/``latest_step``) keys off the .npz, so a kill at
+    any point leaves either no discoverable checkpoint or a complete
+    one -- never an .npz whose sidecar is missing or torn. That is
+    what lets the train driver's crash-resume trust whatever
+    ``saved_steps`` reports.
+    """
     os.makedirs(path, exist_ok=True)
     name = f"ckpt_{step:08d}" if step is not None else "ckpt"
     keys, vals = _flatten_with_paths(tree)
+    fd, tmpj = tempfile.mkstemp(dir=path, suffix=".tmp.json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"keys": keys, "step": step}, f)
+        os.replace(tmpj, os.path.join(path, name + ".json"))
+    finally:
+        if os.path.exists(tmpj):
+            os.remove(tmpj)
     # np.savez appends ".npz" unless the name already ends with it, so
     # the temp file must carry the suffix or the rename moves an empty
     # file.
@@ -37,20 +54,23 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> str:
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
-    meta = {"keys": keys, "step": step}
-    with open(os.path.join(path, name + ".json"), "w") as f:
-        json.dump(meta, f)
     return os.path.join(path, name + ".npz")
 
 
-def latest_step(path: str) -> Optional[int]:
+def saved_steps(path: str) -> list:
+    """Sorted step numbers of the checkpoints in ``path``."""
     if not os.path.isdir(path):
-        return None
+        return []
     steps = []
     for f in os.listdir(path):
         if f.startswith("ckpt_") and f.endswith(".npz"):
             steps.append(int(f[5:13]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(path: str) -> Optional[int]:
+    steps = saved_steps(path)
+    return steps[-1] if steps else None
 
 
 def restore(path: str, like: Any, step: Optional[int] = None) -> Any:

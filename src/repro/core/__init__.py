@@ -32,11 +32,16 @@ from .decoding import (DecodeResult, decode, optimal_alpha_graph,
                        monte_carlo_error, debias_alpha)
 from .batched_decoding import (batched_alpha, batched_fixed_alpha,
                                batched_frc_alpha,
-                               batched_optimal_alpha_graph)
-from .sweep import bernoulli_uniforms, decode_grid, sweep_error
+                               batched_optimal_alpha_graph,
+                               counts_are_exact, fixed_alpha_grid,
+                               frc_alpha_grid)
+from .sweep import (CampaignEntry, bernoulli_uniforms, decode_grid,
+                    sweep_campaign, sweep_error)
 from . import spectral
 from .spectral import (circulant_spectrum, covariance_spectral_norm,
-                       graph_lambda2, lanczos_lambda_max)
+                       covariance_spectral_norm_batch, covariance_topk,
+                       graph_lambda2, lanczos_lambda_max,
+                       lanczos_lambda_max_batch)
 from .stragglers import (StragglerModel, BernoulliStragglers,
                          FixedCountStragglers, MarkovStragglers,
                          AdversarialStragglers,
@@ -61,10 +66,13 @@ __all__ = [
     "optimal_decode_pinv", "optimal_decode_frc", "fixed_decode",
     "normalized_error", "monte_carlo_error", "debias_alpha",
     "batched_alpha", "batched_fixed_alpha", "batched_frc_alpha",
-    "batched_optimal_alpha_graph",
-    "bernoulli_uniforms", "decode_grid", "sweep_error",
+    "batched_optimal_alpha_graph", "counts_are_exact",
+    "fixed_alpha_grid", "frc_alpha_grid",
+    "CampaignEntry", "bernoulli_uniforms", "decode_grid",
+    "sweep_campaign", "sweep_error",
     "spectral", "circulant_spectrum", "covariance_spectral_norm",
-    "graph_lambda2", "lanczos_lambda_max",
+    "covariance_spectral_norm_batch", "covariance_topk",
+    "graph_lambda2", "lanczos_lambda_max", "lanczos_lambda_max_batch",
     "StragglerModel", "BernoulliStragglers", "FixedCountStragglers",
     "MarkovStragglers", "AdversarialStragglers", "adversarial_mask",
     "adversarial_mask_graph", "adversarial_mask_frc",

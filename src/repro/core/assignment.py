@@ -54,6 +54,20 @@ class Assignment:
     def replication_factor(self) -> float:
         return float(np.count_nonzero(self.A)) / self.n
 
+    @functools.cached_property
+    def integer_matrix(self) -> bool:
+        """True when every entry of A is a small nonnegative integer,
+        so count sums like ``alive @ A.T`` run entirely in
+        exactly-representable floats -- summation-order / BLAS-blocking
+        invariant, which is what lets the grid/campaign engines stack
+        fixed/FRC decodes into one GEMM bit-identically to per-point
+        calls (see ``batched_decoding.counts_are_exact``). The O(n*m)
+        scan runs once per assignment (cached_property writes the
+        instance __dict__ directly, bypassing the frozen guard)."""
+        return bool(np.all(self.A >= 0.0)
+                    and np.all(self.A == np.rint(self.A))
+                    and float(self.A.sum()) < 2.0 ** 52)
+
     @property
     def load(self) -> int:
         """Computational load: max blocks per machine."""

@@ -336,22 +336,80 @@ def batched_optimal_alpha_graph(graph: Graph, alive, *,
     return out
 
 
+def fixed_scale(d: float, p: float) -> float:
+    """The Section VIII fixed-decoding coefficient 1/(d (1-p)).
+
+    The single definition (validation included) shared by every fixed
+    decoder -- scalar, batched, and the stacked grid -- whose
+    bit-identity contract depends on this expression being evaluated
+    identically everywhere."""
+    if p >= 1.0:
+        raise ValueError(f"fixed decoding requires p < 1, got p={p}")
+    return 1.0 / (d * (1.0 - p))
+
+
 def fixed_w(alive, d: float, p: float) -> np.ndarray:
     """Section VIII fixed weights: 1/(d (1-p)) on survivors, 0 on
     stragglers. ``alive`` may be a single (m,) mask or a (trials, m)
     batch; shared by the scalar and batched fixed decoders."""
-    if p >= 1.0:
-        raise ValueError(f"fixed decoding requires p < 1, got p={p}")
-    return np.where(alive, 1.0 / (d * (1.0 - p)), 0.0)
+    return np.where(alive, fixed_scale(d, p), 0.0)
+
+
+def counts_are_exact(assignment: Assignment) -> bool:
+    """True when every entry of A is a small nonnegative integer, so
+    ``alive @ A.T`` runs entirely in exactly-representable integers:
+    the sum is then independent of summation order / BLAS blocking, and
+    a stacked (P*trials, m) grid matmul is bit-identical to per-point
+    (or per-mask) matmuls. Every shipped scheme (graph / FRC /
+    adjacency / Bernoulli / uncoded) satisfies this; the guard keeps a
+    hypothetical weighted assignment on the order-sensitive path.
+    The O(n*m) scan is cached on the assignment
+    (``Assignment.integer_matrix``)."""
+    return assignment.integer_matrix
 
 
 def batched_fixed_alpha(assignment: Assignment, alive,
                         p: float) -> np.ndarray:
     """Section VIII fixed decoding for a batch: alpha = A w with
-    w = 1/(d (1-p)) on survivors."""
+    w = 1/(d (1-p)) on survivors -- evaluated count-first
+    (``(alive @ A.T) * c``, exact integer counts) for integer A so the
+    result is batching-invariant; see ``decoding.fixed_decode``."""
     alive = _check_masks(alive, assignment.m)
-    w = fixed_w(alive, assignment.replication_factor, p)
-    return w @ assignment.A.T
+    if not counts_are_exact(assignment):
+        w = fixed_w(alive, assignment.replication_factor, p)
+        return w @ assignment.A.T
+    c = fixed_scale(assignment.replication_factor, p)
+    return (alive.astype(np.float64) @ assignment.A.T) * c
+
+
+def fixed_alpha_grid(assignment: Assignment, masks,
+                     p_grid) -> np.ndarray:
+    """Fixed decoding for a whole (P, trials, m) mask grid in ONE
+    stacked counts matmul: alpha[i] = (masks[i] @ A.T) / (d (1-p_i)).
+
+    Bit-identical to ``batched_fixed_alpha(A, masks[i], p_grid[i])``
+    per point because the counts matmul is exact integer arithmetic
+    (order-independent); the stacked (P*trials, m) GEMM is what makes
+    the campaign's fixed path ~P times cheaper than the per-point loop
+    (one well-blocked BLAS call instead of P skinny ones).
+    """
+    masks = np.asarray(masks, dtype=bool)
+    if masks.ndim != 3 or masks.shape[2] != assignment.m:
+        raise ValueError(f"masks must be (P, trials, {assignment.m}), "
+                         f"got {masks.shape}")
+    P, trials, m = masks.shape
+    if len(p_grid) != P:
+        raise ValueError(f"p_grid has {len(p_grid)} entries for {P} "
+                         "mask batches")
+    if not counts_are_exact(assignment):
+        return np.stack([batched_fixed_alpha(assignment, masks[i],
+                                             float(p_grid[i]))
+                         for i in range(P)])
+    d = assignment.replication_factor
+    scales = np.asarray([fixed_scale(d, float(p)) for p in p_grid])
+    counts = (masks.reshape(P * trials, m).astype(np.float64)
+              @ assignment.A.T).reshape(P, trials, assignment.n)
+    return counts * scales[:, None, None]
 
 
 def batched_frc_alpha(assignment: Assignment, alive) -> np.ndarray:
@@ -362,28 +420,61 @@ def batched_frc_alpha(assignment: Assignment, alive) -> np.ndarray:
     return (counts > 0).astype(np.float64)
 
 
+def frc_alpha_grid(assignment: Assignment, masks) -> np.ndarray:
+    """FRC closed form for a (P, trials, m) grid in one stacked counts
+    matmul; bit-identical to per-point ``batched_frc_alpha`` (exact
+    integer counts, thresholded)."""
+    masks = np.asarray(masks, dtype=bool)
+    if masks.ndim != 3 or masks.shape[2] != assignment.m:
+        raise ValueError(f"masks must be (P, trials, {assignment.m}), "
+                         f"got {masks.shape}")
+    P, trials, m = masks.shape
+    counts = (masks.reshape(P * trials, m).astype(np.float64)
+              @ (assignment.A > 0).T)
+    return (counts > 0).astype(np.float64).reshape(P, trials,
+                                                   assignment.n)
+
+
 def batched_alpha(assignment: Assignment, alive, *,
                   method: str = "optimal", p: float = 0.0,
-                  backend: str = "auto") -> np.ndarray:
+                  backend: str = "auto", labels0=None,
+                  return_labels: bool = False) -> np.ndarray:
     """Batched mirror of ``decoding.decode`` returning alphas (trials, n).
 
     Dispatch matches the scalar path exactly: Def II.2 graph schemes use
     the batched component decoder, FRCs their closed form, everything
     else falls back to a per-trial pseudoinverse.
+
+    ``labels0`` / ``return_labels`` expose the graph decoder's
+    warm-start label protocol (see ``batched_optimal_alpha_graph``)
+    through the dispatching entry point, so multi-scheme pipelines (the
+    sweep campaign) can chain labels per scheme without special-casing
+    graph schemes at every call site. Non-graph schemes have no label
+    state: ``labels0`` must be None there, and ``return_labels=True``
+    returns ``(alphas, None)``.
     """
     alive = _check_masks(alive, assignment.m)
+    graph = method == "optimal" and is_graph_scheme(assignment)
+    if not graph and labels0 is not None:
+        raise ValueError("labels0 is only meaningful for optimal "
+                         "decoding of graph schemes (no label state "
+                         f"for {assignment.name!r}/{method!r})")
+    if graph:
+        return batched_optimal_alpha_graph(
+            assignment.graph, alive, backend=backend, labels0=labels0,
+            return_labels=return_labels)
     if method == "fixed":
-        return batched_fixed_alpha(assignment, alive, p)
-    if method != "optimal":
+        out = batched_fixed_alpha(assignment, alive, p)
+    elif method != "optimal":
         raise ValueError(f"unknown method {method!r}")
-    if is_graph_scheme(assignment):
-        return batched_optimal_alpha_graph(assignment.graph, alive,
-                                           backend=backend)
-    if assignment.name.startswith("frc"):
-        return batched_frc_alpha(assignment, alive)
-    from .decoding import optimal_decode_pinv  # lazy: avoids import cycle
+    elif assignment.name.startswith("frc"):
+        out = batched_frc_alpha(assignment, alive)
+    else:
+        from .decoding import optimal_decode_pinv  # lazy: import cycle
 
-    if alive.shape[0] == 0:
-        return np.zeros((0, assignment.n), dtype=np.float64)
-    return np.stack(
-        [optimal_decode_pinv(assignment, a).alpha for a in alive])
+        if alive.shape[0] == 0:
+            out = np.zeros((0, assignment.n), dtype=np.float64)
+        else:
+            out = np.stack(
+                [optimal_decode_pinv(assignment, a).alpha for a in alive])
+    return (out, None) if return_labels else out

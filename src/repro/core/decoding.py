@@ -30,7 +30,8 @@ import numpy as np
 
 from ..kernels.batched_alpha import ops as _ba_ops
 from .assignment import Assignment
-from .batched_decoding import batched_alpha, fixed_w, is_graph_scheme
+from .batched_decoding import (batched_alpha, counts_are_exact,
+                               fixed_scale, fixed_w, is_graph_scheme)
 from .graphs import Graph
 
 
@@ -242,10 +243,24 @@ def optimal_decode_pinv(assignment: Assignment,
 def fixed_decode(assignment: Assignment, alive: np.ndarray,
                  p: float) -> DecodeResult:
     """Section VIII fixed decoding: w_j = 1/(d (1-p)) on survivors, which
-    makes E[A w] = 1 for d-regular assignments."""
+    makes E[A w] = 1 for d-regular assignments.
+
+    alpha is computed as ``(A @ alive) * c`` rather than ``A @ w``: for
+    the 0/1 assignment matrices every partial sum of ``A @ alive`` is an
+    exact small integer, so the result is independent of summation order
+    and BLAS blocking -- which is what lets the sweep-campaign engine
+    decode a whole (P * trials) grid through one stacked matmul while
+    staying bit-identical to this per-mask oracle (the c-first order
+    ``A @ w`` rounds once per addition and is *not* batching-stable).
+    Non-integer assignment matrices keep the historical ``A @ w`` path.
+    """
     alive = np.asarray(alive, dtype=bool)
     w = fixed_w(alive, assignment.replication_factor, p)
-    return DecodeResult(w=w, alpha=assignment.A @ w)
+    if not counts_are_exact(assignment):
+        return DecodeResult(w=w, alpha=assignment.A @ w)
+    c = fixed_scale(assignment.replication_factor, p)
+    counts = assignment.A @ alive.astype(np.float64)
+    return DecodeResult(w=w, alpha=counts * c)
 
 
 def optimal_decode_frc(assignment: Assignment,

@@ -29,7 +29,7 @@ import numpy as np
 
 from ..kernels.batched_alpha import ops as _ba_ops
 from .assignment import Assignment
-from .batched_decoding import batched_alpha, fixed_w
+from .batched_decoding import batched_alpha, batched_fixed_alpha, fixed_w
 from .decoding import decode
 from .stragglers import (AdversarialStragglers, BernoulliStragglers,
                          FixedCountStragglers, MarkovStragglers,
@@ -140,7 +140,9 @@ def batched_step_weights(assignment: Assignment, masks, *,
                          f"got {masks.shape}")
     if method == "fixed":
         W = fixed_w(masks, assignment.replication_factor, p)
-        alphas = W @ assignment.A.T
+        # Count-first alphas (exact integer counts): bitwise the scalar
+        # ``fixed_decode`` alphas, row for row, on integer A.
+        alphas = batched_fixed_alpha(assignment, masks, p)
     elif method != "optimal":
         raise ValueError(f"unknown method {method!r}")
     else:

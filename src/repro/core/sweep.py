@@ -28,19 +28,33 @@ error kernel and, for the covariance norm, the matrix-free spectral
 pipeline (``core.spectral``) -- O(trials * n * iters) Lanczos instead
 of the dense n x n SVD that dominated the per-point harness at the
 paper's n=2184 scale.
+
+Campaigns
+---------
+The paper's headline comparisons are *cross-scheme* (Figure 3,
+Table I: ours vs FRC vs the expander code of [6] on the same straggler
+draw). ``sweep_campaign`` runs several schemes' whole grids through
+one pipeline: one uniform draw and mask stack per machine count, the
+entire fixed/FRC grid as one stacked exact-counts GEMM, graph decodes
+warm-started per scheme, and every (scheme, p) covariance norm from
+one blocked lockstep Lanczos. Per-(scheme, p) rows stay bit-identical
+to per-scheme ``sweep_error`` (the oracle this engine is
+differential-tested against in tests/test_campaign.py).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..kernels.batched_alpha import ops as _ba_ops
 from .assignment import Assignment
-from .batched_decoding import (batched_alpha, batched_optimal_alpha_graph,
-                               is_graph_scheme)
-from .spectral import covariance_spectral_norm
+from .batched_decoding import (batched_alpha, fixed_alpha_grid,
+                               frc_alpha_grid, is_graph_scheme)
+from .spectral import (covariance_spectral_norm,
+                       covariance_spectral_norm_batch, covariance_topk)
 
 
 def bernoulli_uniforms(m: int, trials: int, seed: int = 0) -> np.ndarray:
@@ -80,22 +94,22 @@ def decode_grid(assignment: Assignment, masks, *, method: str = "optimal",
                          "p_grid (weights are 1/(d (1-p)))")
     out = np.empty((P, masks.shape[1], assignment.n), dtype=np.float64)
     if method == "optimal" and is_graph_scheme(assignment):
-        g = assignment.graph
+        # Label chaining goes through the dispatching batched_alpha
+        # entry point (its labels0/return_labels plumbing), so the
+        # warm-start protocol reads the same for every pipeline that
+        # sits on decode_grid.
         labels = None
         for i in range(P):
-            if warm_start:
-                if i and not np.all(masks[i] >= masks[i - 1]):
-                    raise ValueError(
-                        "warm_start needs nested masks: grid point "
-                        f"{i} revokes machines alive at point {i - 1} "
-                        "(order a shared-uniform grid by descending p, "
-                        "or pass warm_start=False)")
-                out[i], labels = batched_optimal_alpha_graph(
-                    g, masks[i], backend=backend, labels0=labels,
-                    return_labels=True)
-            else:
-                out[i] = batched_optimal_alpha_graph(g, masks[i],
-                                                     backend=backend)
+            if warm_start and i and not np.all(masks[i] >= masks[i - 1]):
+                raise ValueError(
+                    "warm_start needs nested masks: grid point "
+                    f"{i} revokes machines alive at point {i - 1} "
+                    "(order a shared-uniform grid by descending p, "
+                    "or pass warm_start=False)")
+            out[i], labels = batched_alpha(
+                assignment, masks[i], method="optimal", backend=backend,
+                labels0=labels if warm_start else None,
+                return_labels=True)
     else:
         for i in range(P):
             p_i = 0.0 if p_grid is None else float(p_grid[i])
@@ -146,3 +160,183 @@ def sweep_error(assignment: Assignment, p_grid: Sequence[float], *,
                 alphas[i] * scale, method=cov_method)
         rows.append(row)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Multi-scheme campaigns
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignEntry:
+    """One scheme's seat in a ``sweep_campaign``.
+
+    ``masks`` overrides the shared Bernoulli draw with an explicit
+    (P, trials, m) stack -- the adversarial-attack harness, where each
+    grid point's masks come from ``adversarial_mask`` rather than a
+    straggler probability (warm-started labels are skipped there: the
+    attack stacks are not nested in p). ``debias=False`` reports raw
+    (1/n)|alpha - 1|^2 errors, as the worst-case tables do.
+    """
+
+    assignment: Assignment
+    method: str = "optimal"      # 'optimal' | 'fixed'
+    label: Optional[str] = None
+    masks: Optional[np.ndarray] = None
+    debias: bool = True
+
+    def resolved_label(self) -> str:
+        return self.label or f"{self.assignment.name}:{self.method}"
+
+
+EntryLike = Union[CampaignEntry, Assignment,
+                  Tuple[Assignment, str], Tuple[Assignment, str, str]]
+
+
+def _as_entry(e: EntryLike) -> CampaignEntry:
+    if isinstance(e, CampaignEntry):
+        return e
+    if isinstance(e, Assignment):
+        return CampaignEntry(assignment=e)
+    if isinstance(e, tuple) and len(e) in (2, 3) and \
+            isinstance(e[0], Assignment):
+        return CampaignEntry(assignment=e[0], method=e[1],
+                             label=e[2] if len(e) == 3 else None)
+    raise TypeError(f"campaign entry must be CampaignEntry, Assignment "
+                    f"or (assignment, method[, label]); got {e!r}")
+
+
+def _campaign_alphas(entry: CampaignEntry, masks: np.ndarray,
+                     p_list: List[float], *, backend: str,
+                     warm_start: bool) -> np.ndarray:
+    """(P, T, m) masks -> (P, T, n) alphas for one entry, through the
+    cheapest pipeline that stays bit-identical to the per-scheme
+    ``sweep_error`` oracle (see each branch)."""
+    A = entry.assignment
+    if entry.method == "fixed":
+        # One stacked exact-counts GEMM for the whole grid
+        # (bit-identical to per-point batched_fixed_alpha: integer
+        # counts are summation-order-invariant).
+        return fixed_alpha_grid(A, masks, p_list)
+    if entry.method != "optimal":
+        raise ValueError(f"unknown method {entry.method!r}")
+    if is_graph_scheme(A):
+        # Same descending-p / warm-started-label walk as sweep_error.
+        order = np.argsort(-np.asarray(p_list), kind="stable") if \
+            entry.masks is None and len(p_list) else \
+            np.arange(len(p_list), dtype=np.int64)
+        out = np.empty((len(p_list), masks.shape[1], A.n))
+        out[order] = decode_grid(
+            A, masks[order], method="optimal", backend=backend,
+            warm_start=warm_start and entry.masks is None)
+        return out
+    if A.name.startswith("frc"):
+        return frc_alpha_grid(A, masks)  # stacked exact counts
+    return np.stack([batched_alpha(A, masks[i], method="optimal",
+                                   backend=backend)
+                     for i in range(masks.shape[0])]) if len(p_list) \
+        else np.zeros((0, masks.shape[1], A.n))
+
+
+def sweep_campaign(entries: Sequence[EntryLike],
+                   p_grid: Sequence[float], *, trials: int,
+                   seed: int = 0, backend: str = "auto",
+                   debias: bool = True, cov: bool = True,
+                   cov_method: str = "auto", warm_start: bool = True,
+                   cov_topk: int = 0) -> Dict[str, List[Dict]]:
+    """Run several schemes' whole Figure-3 grids in ONE pipeline.
+
+    The cross-scheme protocol of the paper's headline comparisons
+    (Figure 3, Table I): every scheme of the same machine count m faces
+    the *same* straggler draw. The campaign samples one
+    ``bernoulli_uniforms(m, trials, seed)`` per distinct m, thresholds
+    the whole (P, trials, m) mask stack once, and shares it across all
+    entries of that m -- so per-(scheme, p) rows are bit-identical to
+    per-scheme ``sweep_error(A, p_grid, trials=trials, seed=seed,
+    method=...)`` calls (and hence to per-point ``monte_carlo_error``),
+    while the work the sequential loop re-pays per scheme is paid once:
+
+    * mask sampling + thresholding, per m instead of per scheme;
+    * fixed/FRC decoding as ONE stacked (P * trials, m) exact-counts
+      GEMM per scheme instead of P skinny per-point matmuls;
+    * graph decodes warm-started through the nested-in-p label chain
+      (as in ``sweep_error``), reusing the per-graph cover cache and
+      jit entry;
+    * ALL (scheme, p) covariance norms through one blocked lockstep
+      Lanczos over the stacked batch (``cov_method='blocked'``; 'auto'
+      picks it past the dense crossover) -- a single kernel launch
+      sequence instead of S*P Lanczos loops.
+
+    ``entries`` accepts ``CampaignEntry`` (mask-stack overrides,
+    per-entry debias), bare assignments (optimal decoding), or
+    ``(assignment, method[, label])`` tuples. Returns an insertion-
+    ordered dict label -> ``sweep_error``-shaped rows; ``cov_topk > 0``
+    adds the leading covariance spectrum (``covariance_topk``) per row.
+    """
+    ents = [_as_entry(e) for e in entries]
+    if not ents:
+        raise ValueError("campaign needs at least one entry")
+    labels = [e.resolved_label() for e in ents]
+    if len(set(labels)) != len(labels):
+        raise ValueError(f"duplicate campaign labels {labels}; pass "
+                         "explicit label= to disambiguate")
+    p_list = [float(p) for p in p_grid]
+    P = len(p_list)
+
+    # One shared draw + mask stack per distinct machine count.
+    shared_masks: Dict[int, np.ndarray] = {}
+    for e in ents:
+        m = e.assignment.m
+        if e.masks is None and m not in shared_masks:
+            u = bernoulli_uniforms(m, trials, seed)
+            shared_masks[m] = np.stack([u >= p for p in p_list]) if P \
+                else np.zeros((0, trials, m), dtype=bool)
+
+    results: Dict[str, List[Dict]] = {}
+    cov_slices: List[Tuple[str, int, np.ndarray]] = []
+    for e, label in zip(ents, labels):
+        if e.masks is not None:
+            masks = np.asarray(e.masks, dtype=bool)
+            if masks.ndim != 3 or masks.shape[0] != P or \
+                    masks.shape[2] != e.assignment.m:
+                raise ValueError(
+                    f"entry {label!r} mask stack must be (P={P}, "
+                    f"trials, m={e.assignment.m}), got {masks.shape}")
+        else:
+            masks = shared_masks[e.assignment.m]
+        alphas = _campaign_alphas(e, masks, p_list, backend=backend,
+                                  warm_start=warm_start)
+        rows: List[Dict] = []
+        for i, p in enumerate(p_list):
+            errs, scale = _ba_ops.fused_error(
+                alphas[i], debias=debias and e.debias)
+            rows.append({
+                "p": p,
+                "mean_error": float(errs.mean()),
+                "std_error": float(errs.std()),
+            })
+            if cov or cov_topk:
+                scaled = alphas[i] * scale
+                if cov:
+                    cov_slices.append((label, i, scaled))
+                if cov_topk:
+                    rows[-1]["cov_topk"] = covariance_topk(
+                        scaled, cov_topk).tolist()
+        results[label] = rows
+
+    if cov_slices:
+        # Group equal-(trials, n) slices so the blocked path can stack
+        # them; ``covariance_spectral_norm_batch`` owns the method
+        # dispatch ('dense'/'lanczos' loop the per-point oracle, i.e.
+        # bit-identical to sweep_error rows with that cov_method).
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for idx, (_, _, s) in enumerate(cov_slices):
+            groups.setdefault(s.shape, []).append(idx)
+        for idxs in groups.values():
+            norms = covariance_spectral_norm_batch(
+                np.stack([cov_slices[i][2] for i in idxs]),
+                method=cov_method)
+            for i, norm in zip(idxs, norms):
+                label, pt, _ = cov_slices[i]
+                results[label][pt]["cov_norm"] = float(norm)
+    return results

@@ -407,6 +407,20 @@ class CodingRuntime:
         self.decode_calls = 0
         self.steps_sampled = 0
 
+    def skip(self, rounds: int) -> None:
+        """Fast-forward the straggler stream by ``rounds`` samples
+        without decoding -- the checkpoint-resume path: a restored run
+        calls ``skip(start_step)`` so its subsequent masks (and hence
+        weights, via the same memoised decode) are bit-identical to
+        the original run's stream from that step on. Consumes exactly
+        the RNG draws ``step_weights``/``weights_lookahead`` would
+        (and advances stateful models like the Markov chain)."""
+        if rounds < 0:
+            raise ValueError("rounds must be >= 0")
+        for _ in range(rounds):
+            self.model.sample(self.rng)
+        self.steps_sampled += rounds
+
     def step_weights(self) -> Tuple[np.ndarray, np.ndarray]:
         """Sample one round: returns (w (m,) float32, alive (m,) bool)."""
         alive = self.model.sample(self.rng)

@@ -37,10 +37,18 @@ def _pick_block_r(rows: int, k: int) -> int:
 def gram_matvec(x: jnp.ndarray, v: jnp.ndarray, *,
                 block_r: int | None = None,
                 interpret: bool = False) -> jnp.ndarray:
-    """x: (R, k); v: (k,) -> (k,) float32 X^T (X v)."""
+    """x: (R, k); v: (k,) or (bv, k) -> float32 X^T (X v).
+
+    A 1-D ``v`` returns (k,); a 2-D ``v`` is bv stacked right-hand
+    sides (the block-Lanczos case) and returns (bv, k) -- the same
+    revisiting-accumulator kernel, with the (1, kp) projection/output
+    tiles widened to (bv, kp) so all bv columns ride one pass over X.
+    """
+    vec = v.ndim == 1
     rows, k = x.shape
     x = x.astype(jnp.float32)
-    v = jnp.asarray(v, jnp.float32).reshape(1, k)
+    v = jnp.asarray(v, jnp.float32).reshape(-1, k)
+    bv = v.shape[0]
     pad_k = (-k) % 128
     if pad_k:
         x = jnp.pad(x, ((0, 0), (0, pad_k)))
@@ -57,10 +65,10 @@ def gram_matvec(x: jnp.ndarray, v: jnp.ndarray, *,
             o_ref[...] = jnp.zeros_like(o_ref)
 
         xb = x_ref[...]                              # (br, kp)
-        y = jax.lax.dot_general(                     # (br, 1) = X_blk v
+        y = jax.lax.dot_general(                     # (br, bv) = X_blk V^T
             xb, v_ref[...], (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
-        o_ref[...] += jax.lax.dot_general(           # (1, kp) = y^T X_blk
+        o_ref[...] += jax.lax.dot_general(           # (bv, kp) = Y^T X_blk
             y, xb, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
@@ -69,10 +77,62 @@ def gram_matvec(x: jnp.ndarray, v: jnp.ndarray, *,
         grid=((rows + pad_r) // br,),
         in_specs=[
             pl.BlockSpec((br, kp), lambda i: (i, 0)),
-            pl.BlockSpec((1, kp), lambda i: (0, 0)),
+            pl.BlockSpec((bv, kp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, kp), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, kp), jnp.float32),
+        out_specs=pl.BlockSpec((bv, kp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bv, kp), jnp.float32),
         interpret=interpret,
     )(x, v)
-    return out[0, :k]
+    return out[0, :k] if vec else out[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def gram_matvec_batch(x: jnp.ndarray, v: jnp.ndarray, *,
+                      block_r: int | None = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """x: (B, R, k); v: (B, k) -> (B, k) float32 per-slice X^T (X v).
+
+    The lockstep-Lanczos batch form: grid (B, R // block_r) with the
+    row axis innermost, so each slice's (1, 1, kp) output tile is
+    revisited consecutively (the sequential-grid accumulator pattern of
+    the single-slice kernel) and the whole stack runs in one kernel
+    launch sequence instead of B.
+    """
+    nb, rows, k = x.shape
+    x = x.astype(jnp.float32)
+    v = jnp.asarray(v, jnp.float32).reshape(nb, 1, k)
+    pad_k = (-k) % 128
+    if pad_k:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_k)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k)))
+    kp = k + pad_k
+    br = block_r or _pick_block_r(rows, kp)
+    pad_r = (-rows) % br
+    if pad_r:
+        x = jnp.pad(x, ((0, 0), (0, pad_r), (0, 0)))
+
+    def body(x_ref, v_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        xb = x_ref[0]                                # (br, kp)
+        y = jax.lax.dot_general(                     # (br, 1) = X_blk v
+            xb, v_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0] += jax.lax.dot_general(             # (1, kp) = y^T X_blk
+            y, xb, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    out = pl.pallas_call(
+        body,
+        grid=(nb, (rows + pad_r) // br),
+        in_specs=[
+            pl.BlockSpec((1, br, kp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, kp), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, kp), lambda b, i: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 1, kp), jnp.float32),
+        interpret=interpret,
+    )(x, v)
+    return out[:, 0, :k]

@@ -18,3 +18,32 @@ def gram_matvec(x: np.ndarray, v: np.ndarray) -> np.ndarray:
     x = np.asarray(x, dtype=np.float64)
     v = np.asarray(v, dtype=np.float64)
     return x.T @ (x @ v)
+
+
+def gram_matvec_block(x: np.ndarray, V: np.ndarray) -> np.ndarray:
+    """x: (R, k), V: (k, b) -> x^T (x V), all float64.
+
+    The block-Lanczos form of the Gram matvec (b right-hand sides per
+    sweep over x); still never materializes the (k, k) Gram matrix.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    V = np.asarray(V, dtype=np.float64)
+    return x.T @ (x @ V)
+
+
+def gram_matvec_batch(x: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """x: (B, R, k), v: (B, k) -> (B, k) per-slice x_b^T (x_b v_b).
+
+    The blocked-Lanczos workhorse: one call applies every slice's Gram
+    operator (the sweep campaign stacks all (scheme, p) covariance
+    batches into one operand). On CPU the per-slice GEMV loop *is* the
+    fastest float64 formulation (batched einsum/GEMM lose to clean
+    BLAS strides at these shapes), and it keeps the batch oracle
+    definitionally consistent with the single-slice one; the fused
+    single-launch-sequence form lives in the Pallas kernel.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    if x.shape[0] == 0:
+        return np.zeros_like(v)
+    return np.stack([gram_matvec(x[i], v[i]) for i in range(x.shape[0])])

@@ -1,0 +1,98 @@
+"""Adversarial attacks vs the brute-force Def I.3 oracle.
+
+On small schemes (m <= 10) every straggler set within the |S| <= pm
+budget is enumerable: C(m, floor(pm)) optimal decodes give the TRUE
+worst-case decoding error (checking only sets of size exactly
+floor(pm) is sound -- shrinking the alive set shrinks the decoder's
+feasible set, so the worst case is attained at a full-budget S). The
+greedy attacks in ``core.stragglers`` must (a) never exceed the
+budget, and (b) attain that worst case on the paper-regime cases --
+one known exception is documented below with its measured gap.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (AdversarialStragglers, adversarial_mask,
+                        cycle_graph, complete_graph, decode,
+                        frc_assignment, graph_assignment,
+                        normalized_error, random_regular_graph)
+
+
+def brute_force_worst(assignment, p):
+    """True worst-case normalized error over all |S| <= floor(pm)."""
+    m = assignment.m
+    budget = int(np.floor(p * m))
+    worst = 0.0
+    for S in itertools.combinations(range(m), budget):
+        alive = np.ones(m, dtype=bool)
+        alive[list(S)] = False
+        worst = max(worst, normalized_error(
+            decode(assignment, alive, method="optimal").alpha))
+    return worst, budget
+
+
+CASES = [
+    ("cycle5", lambda: graph_assignment(cycle_graph(5), name="cycle5")),
+    ("cycle7", lambda: graph_assignment(cycle_graph(7), name="cycle7")),
+    ("K4", lambda: graph_assignment(complete_graph(4), name="K4")),
+    ("rr_n6_d3", lambda: graph_assignment(
+        random_regular_graph(6, 3, seed=0), name="rr_n6_d3")),
+    ("frc_8_2", lambda: frc_assignment(8, 2)),
+    ("frc_9_3", lambda: frc_assignment(9, 3)),
+]
+
+
+@pytest.mark.parametrize("p", [0.2, 0.3, 0.4])
+@pytest.mark.parametrize("name,make", CASES)
+def test_attack_attains_brute_force_worst_case(name, make, p):
+    A = make()
+    worst, budget = brute_force_worst(A, p)
+    mask = adversarial_mask(A, p)
+    assert int((~mask).sum()) <= budget, \
+        f"{name}: attack exceeds the Def I.3 budget"
+    attained = normalized_error(decode(A, mask, method="optimal").alpha)
+    # Sanity: an attack can never beat the enumerated worst case.
+    assert attained <= worst + 1e-12
+    # In the paper's p <= 0.4 regime the greedy attacks are exactly
+    # worst-case optimal on all these schemes (verified by enumeration;
+    # the known sub-optimality lives at larger p, see the gap test).
+    assert attained == pytest.approx(worst, abs=1e-12), \
+        f"{name} p={p}: greedy attack {attained} < brute force {worst}"
+
+
+def test_documented_greedy_gap_at_large_p():
+    """The greedy vertex-isolation attack is NOT always optimal: on
+    this random 3-regular graph at p=0.5 (budget 4 of m=9) the true
+    worst case isolates differently and the greedy attack reaches only
+    5/6 of it. Documented here with its measured value so a future
+    smarter attack shows up as this test failing in the good
+    direction."""
+    A = graph_assignment(random_regular_graph(6, 3, seed=2),
+                         name="rr_n6_d3_seed2")
+    worst, budget = brute_force_worst(A, 0.5)
+    mask = adversarial_mask(A, 0.5)
+    attained = normalized_error(decode(A, mask, method="optimal").alpha)
+    assert int((~mask).sum()) <= budget
+    assert attained <= worst + 1e-12
+    assert worst == pytest.approx(0.2, abs=1e-12)
+    assert attained == pytest.approx(1 / 6, abs=1e-12)  # the 5/6 gap
+    assert attained >= 0.8 * worst  # never worse than 80% of optimal
+
+
+@pytest.mark.parametrize("p", [0.2, 0.4])
+def test_adversarial_process_respects_budget_and_replays(p):
+    """``AdversarialStragglers`` (the Def I.3 *process*) replays one
+    fixed attack mask every round, within budget, ignoring the RNG."""
+    A = graph_assignment(random_regular_graph(8, 3, seed=1), name="rr8")
+    model = AdversarialStragglers(assignment=A, p=p)
+    rng = np.random.default_rng(0)
+    first = model.sample(rng)
+    budget = int(np.floor(p * A.m))
+    assert int((~first).sum()) <= budget
+    for _ in range(5):
+        again = model.sample(np.random.default_rng(rng.integers(1 << 30)))
+        np.testing.assert_array_equal(again, first)
+    np.testing.assert_array_equal(first, adversarial_mask(A, p))

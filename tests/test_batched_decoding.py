@@ -284,3 +284,33 @@ if HAVE_HYPOTHESIS:
         np.testing.assert_array_equal(
             batched_alpha(A, masks, method="optimal", backend="numpy"),
             ref)
+
+
+def test_batched_alpha_label_plumbing():
+    """labels0/return_labels through the dispatching entry point (the
+    multi-scheme pipelines' warm-start protocol, exercised by
+    decode_grid): warm-started alphas are bit-identical to cold ones
+    under nested masks, and non-graph schemes carry no label state."""
+    A = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    rng = np.random.default_rng(3)
+    u = rng.random((8, A.m))
+    hi, lo = u >= 0.5, u >= 0.2  # lo revives machines: nested
+    cold_hi, labels = batched_alpha(A, hi, method="optimal",
+                                    backend="numpy", return_labels=True)
+    assert labels.shape == (8, 2 * A.n)
+    warm_lo = batched_alpha(A, lo, method="optimal", backend="numpy",
+                            labels0=labels)
+    np.testing.assert_array_equal(
+        warm_lo, batched_alpha(A, lo, method="optimal", backend="numpy"))
+    np.testing.assert_array_equal(
+        cold_hi, batched_alpha(A, hi, method="optimal", backend="numpy"))
+    # non-graph schemes: no label state
+    F = frc_assignment(24, 3)
+    out, none = batched_alpha(F, hi, method="optimal",
+                              return_labels=True)
+    assert none is None
+    np.testing.assert_array_equal(out, batched_alpha(F, hi))
+    with pytest.raises(ValueError, match="labels0"):
+        batched_alpha(F, hi, method="optimal", labels0=labels)
+    with pytest.raises(ValueError, match="labels0"):
+        batched_alpha(A, hi, method="fixed", p=0.3, labels0=labels)

@@ -1,0 +1,75 @@
+"""Checkpoint round-trip on the real train driver: save mid-run,
+restore, and the resumed coded train step must continue the
+loss/metric stream bit-identically.
+
+What makes this exact (not just close): checkpoints carry the full
+{params, opt_state} state as float32 npz (lossless), data batches are
+a pure function of the step index, and ``CodingRuntime.skip`` replays
+the straggler RNG stream to the resume point -- so the resumed run's
+masks, decoded weights and device inputs are bitwise the inputs the
+uninterrupted run saw. Subprocess for the same reason as
+test_smoke_train: the 8-virtual-device count must enter XLA_FLAGS
+before jax initialises.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+STEPS, MID, EVERY = 8, 6, 4
+
+
+def _run_driver(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "qwen1.5-4b", "--seq-len", "32", "--block-size", "2",
+         "--straggler-p", "0.2", "--log-every", "3", *extra],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_resume_is_bit_identical(tmp_path):
+    full = _run_driver("--steps", str(STEPS), "--dedup",
+                       "--lookahead", "3")
+
+    # Interrupted run: checkpoints every EVERY=4 steps, stopped at
+    # MID=6 -- so BOTH save paths fire: the periodic mid-loop save at
+    # step 4 (4 % 4 == 0 and 4 < 6) and the end-of-run save at 6.
+    ck = str(tmp_path / "ck")
+    first = _run_driver("--steps", str(MID), "--dedup", "--lookahead",
+                        "3", "--ckpt-dir", ck, "--ckpt-every",
+                        str(EVERY))
+    assert first["start_step"] == 0
+    assert first["losses"] == full["losses"][:MID], \
+        "pre-checkpoint stream must match the uninterrupted run"
+    assert os.path.exists(os.path.join(ck, "ckpt_00000004.npz")), \
+        "periodic --ckpt-every save must fire mid-run"
+    assert os.path.exists(os.path.join(ck, "ckpt_00000006.npz"))
+
+    resumed = _run_driver("--steps", str(STEPS), "--dedup",
+                          "--lookahead", "3", "--ckpt-dir", ck,
+                          "--ckpt-every", str(EVERY))
+    assert resumed["start_step"] == MID  # newest usable checkpoint
+    assert len(resumed["losses"]) == STEPS - MID
+    # The contract: bitwise equality of the resumed loss stream with
+    # the uninterrupted run's tail (floats round-tripped through
+    # json.dumps preserve every bit).
+    assert resumed["losses"] == full["losses"][MID:], (
+        f"resumed stream diverged:\n{resumed['losses']}\nvs\n"
+        f"{full['losses'][MID:]}")
+
+    # Capping --steps below a saved checkpoint resumes from the newest
+    # checkpoint at-or-before it (the mid-run step-4 one), never
+    # relabeling a later-step state as an earlier step.
+    capped = _run_driver("--steps", str(EVERY), "--dedup",
+                         "--lookahead", "3", "--ckpt-dir", ck)
+    assert capped["start_step"] == EVERY
+    assert capped["losses"] == []

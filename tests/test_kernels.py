@@ -141,6 +141,57 @@ def test_spectral_matvec_ops_is_float64_oracle_on_cpu():
         sm_ops.gram_matvec(x, np.ones(3))
 
 
+@pytest.mark.parametrize("R,k,bv", [(64, 16, 1), (100, 30, 4),
+                                    (33, 130, 7), (2184, 30, 3)])
+def test_spectral_matvec_block_kernel_matches_ref(R, k, bv):
+    """The widened-tile block form: bv right-hand sides per pass."""
+    x = RNG.normal(size=(R, k))
+    V = RNG.normal(size=(k, bv))
+    out = sm_k.gram_matvec(jnp.asarray(x, jnp.float32),
+                           jnp.asarray(V.T, jnp.float32),
+                           interpret=True)
+    ref = sm_r.gram_matvec_block(x, V)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(out, np.float64).T / scale,
+                               ref / scale, atol=5e-6, rtol=0)
+
+
+@pytest.mark.parametrize("B,R,k,br", [(1, 64, 16, None), (5, 100, 30, 16),
+                                      (3, 33, 130, 8), (12, 2184, 30, None)])
+def test_spectral_matvec_batch_kernel_matches_ref(B, R, k, br):
+    """The lockstep batch form: grid (B, R // br), one accumulator tile
+    per slice."""
+    x = RNG.normal(size=(B, R, k))
+    v = RNG.normal(size=(B, k))
+    out = sm_k.gram_matvec_batch(jnp.asarray(x, jnp.float32),
+                                 jnp.asarray(v, jnp.float32),
+                                 block_r=br, interpret=True)
+    ref = sm_r.gram_matvec_batch(x, v)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(out, np.float64) / scale,
+                               ref / scale, atol=5e-6, rtol=0)
+
+
+def test_spectral_matvec_block_and_batch_ops_oracle_on_cpu():
+    x = RNG.normal(size=(40, 9))
+    V = RNG.normal(size=(9, 3))
+    np.testing.assert_array_equal(sm_ops.gram_matvec_block(x, V),
+                                  sm_r.gram_matvec_block(x, V))
+    xb = RNG.normal(size=(4, 40, 9))
+    vb = RNG.normal(size=(4, 9))
+    np.testing.assert_array_equal(sm_ops.gram_matvec_batch(xb, vb),
+                                  sm_r.gram_matvec_batch(xb, vb))
+    # batch oracle == single-slice oracle per slice, by construction
+    for i in range(4):
+        np.testing.assert_array_equal(
+            sm_r.gram_matvec_batch(xb, vb)[i],
+            sm_r.gram_matvec(xb[i], vb[i]))
+    with pytest.raises(ValueError, match="k, b"):
+        sm_ops.gram_matvec_block(x, np.ones((3, 2)))
+    with pytest.raises(ValueError, match="B, R, k"):
+        sm_ops.gram_matvec_batch(xb, np.ones((4, 3)))
+
+
 def test_batched_alpha_ops_debias_matches_debias_alpha():
     from repro.core.decoding import debias_alpha
 

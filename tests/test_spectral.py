@@ -160,3 +160,114 @@ def test_lanczos_lambda_max_exhaustion_exact():
     lam = S.lanczos_lambda_max(lambda v: M @ v, 6)
     assert lam == pytest.approx(5.0, abs=1e-10)
     assert S.lanczos_lambda_max(lambda v: v * 0.0, 4) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Blocked (lockstep) Lanczos + top-k spectrum
+# ---------------------------------------------------------------------------
+
+
+def test_lanczos_lambda_max_batch_matches_scalar():
+    B, dim = 7, 24
+    mats = []
+    for i in range(B):
+        q, _ = np.linalg.qr(RNG.normal(size=(dim, dim)))
+        d = RNG.uniform(-3.0, 3.0, size=dim) * (i + 1)
+        mats.append(q @ np.diag(d) @ q.T)
+
+    def mv(V, idx):
+        # the lockstep compacts converged slices out: idx maps V's
+        # rows back to original operators
+        return np.stack([mats[i] @ V[j] for j, i in enumerate(idx)])
+
+    lams = S.lanczos_lambda_max_batch(mv, dim, B)
+    for i in range(B):
+        ref = S.lanczos_lambda_max(lambda v: mats[i] @ v, dim)
+        exact = float(np.linalg.eigvalsh(mats[i])[-1])
+        assert lams[i] == pytest.approx(exact, rel=1e-9, abs=1e-9)
+        assert lams[i] == pytest.approx(ref, rel=1e-9, abs=1e-9)
+
+
+def test_lanczos_lambda_max_batch_degenerate_slices():
+    """A zero slice, a rank-1 slice, and a full-rank slice in one
+    lockstep run: per-slice breakdown/exhaustion handling must keep
+    every result exact."""
+    dim, B = 8, 3
+    u = RNG.normal(size=dim)
+    r1 = np.outer(u, u)
+    q, _ = np.linalg.qr(RNG.normal(size=(dim, dim)))
+    full = q @ np.diag(np.arange(1.0, dim + 1.0)) @ q.T
+    mats = [np.zeros((dim, dim)), r1, full]
+
+    def mv(V, idx):
+        return np.stack([mats[i] @ V[j] for j, i in enumerate(idx)])
+
+    lams = S.lanczos_lambda_max_batch(mv, dim, B)
+    assert lams[0] == pytest.approx(0.0, abs=1e-10)
+    assert lams[1] == pytest.approx(float(u @ u), rel=1e-10)
+    assert lams[2] == pytest.approx(float(dim), rel=1e-10)
+    assert S.lanczos_lambda_max_batch(mv, dim, 0).shape == (0,)
+    assert np.all(
+        S.lanczos_lambda_max_batch(lambda V, idx: V, 0, 3) == 0.0)
+
+
+def test_covariance_spectral_norm_batch_blocked_vs_oracles():
+    tol = 1e-8 if FLOAT64_MATVEC else 5e-3
+    for B, T, n in [(1, 20, 9), (5, 12, 40), (4, 30, 30), (3, 50, 8)]:
+        stack = RNG.normal(loc=1.0, scale=0.2, size=(B, T, n)) * \
+            RNG.uniform(0.5, 2.0, size=(B, 1, 1))
+        blocked = S.covariance_spectral_norm_batch(stack,
+                                                   method="blocked")
+        dense = S.covariance_spectral_norm_batch(stack, method="dense")
+        per_slice = np.asarray([S.covariance_spectral_norm(s,
+                                method="dense") for s in stack])
+        np.testing.assert_array_equal(dense, per_slice)
+        assert np.all(np.abs(blocked - dense) <=
+                      tol * np.maximum(dense, 1.0)), (B, T, n)
+    with pytest.raises(ValueError, match="B, trials, n"):
+        S.covariance_spectral_norm_batch(np.zeros((3, 4)))
+    with pytest.raises(ValueError, match="method"):
+        S.covariance_spectral_norm_batch(np.zeros((2, 3, 4)),
+                                         method="qr")
+    assert np.all(S.covariance_spectral_norm_batch(
+        np.zeros((2, 0, 4))) == 0.0)
+
+
+def test_covariance_topk_matches_dense_svd():
+    tol = 1e-8 if FLOAT64_MATVEC else 5e-3
+    for T, n, k in [(30, 50, 5), (12, 80, 3), (40, 10, 10), (6, 64, 8)]:
+        a = RNG.normal(loc=1.0, scale=0.3, size=(T, n)) * \
+            RNG.uniform(0.2, 3.0, size=n)
+        block = S.covariance_topk(a, k, method="block")
+        centered = a - a.mean(axis=0, keepdims=True)
+        cov = centered.T @ centered / T
+        dense_full = np.maximum(np.linalg.eigvalsh(cov)[::-1][:k], 0.0)
+        dense = S.covariance_topk(a, k, method="dense")
+        np.testing.assert_allclose(dense, dense_full, atol=1e-12)
+        assert block.shape == (k,)
+        assert np.all(np.diff(block) <= 1e-12)  # descending
+        np.testing.assert_allclose(block, dense, atol=tol,
+                                   rtol=tol)
+        # top-1 of the spectrum == the spectral norm path
+        norm = S.covariance_spectral_norm(a, method="lanczos")
+        assert abs(block[0] - norm) <= tol * max(norm, 1.0)
+
+
+def test_covariance_topk_rank_deficient_and_validation():
+    # rank <= trials - 1 = 3: requested k beyond rank pads exact zeros
+    a = RNG.normal(size=(4, 30))
+    top = S.covariance_topk(a, 6, method="block")
+    assert top.shape == (6,)
+    # beyond-rank values are zero up to Ritz rounding residue
+    assert np.all(top[3:] <= 1e-10 * max(top[0], 1.0))
+    dense = S.covariance_topk(a, 6, method="dense")
+    np.testing.assert_allclose(top[:3], dense[:3], rtol=1e-8)
+    with pytest.raises(ValueError, match="k must be"):
+        S.covariance_topk(a, 0)
+    with pytest.raises(ValueError, match="trials"):
+        S.covariance_topk(np.zeros(3), 2)
+    with pytest.raises(ValueError, match="method"):
+        S.covariance_topk(a, 2, method="qr")
+    assert np.all(S.covariance_topk(np.zeros((0, 4)), 2) == 0.0)
+    assert np.all(S.covariance_topk(np.ones((5, 7)) * 2.5, 3,
+                                    method="block") == 0.0)

@@ -1,0 +1,134 @@
+"""Property suite for ``core.step_weights``: the batched pipeline is
+the scalar one row-for-row, stragglers always carry zero weight, and
+``block_weights`` is exactly the linear map A @ w -- across randomized
+regular, FRC, and irregular/padded assignments (extending the fixed
+cases of tests/test_dedup.py).
+
+The properties run twice: over a deterministic seeded sample (always,
+so tier-1 pins them even where hypothesis isn't installed) and under
+hypothesis fuzzing when available (CI guards that it is).
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.step_weights as sw
+from repro.core import frc_assignment, graph_assignment
+from repro.core.assignment import Assignment
+from repro.core.graphs import random_regular_graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYP = True
+except ImportError:  # pragma: no cover - CI fails loudly via the guard
+    HAS_HYP = False
+
+
+def random_assignment(rng: np.random.Generator) -> Assignment:
+    """A randomized scheme: graph / FRC / irregular binary A (the
+    irregular draw includes padded machines with below-max load and
+    guarantees every block and machine is assigned somewhere)."""
+    kind = rng.integers(3)
+    if kind == 0:
+        n = int(rng.choice([4, 6, 8]))
+        d = int(rng.choice([2, 3]))
+        if (n * d) % 2:
+            n += 1
+        return graph_assignment(random_regular_graph(n, d, seed=int(
+            rng.integers(1 << 16))), name=f"rr_{n}_{d}")
+    if kind == 1:
+        d = int(rng.choice([2, 3]))
+        n = int(rng.integers(2, 5))
+        return frc_assignment(n * d, d)
+    n = int(rng.integers(2, 6))
+    m = int(rng.integers(2, 7))
+    A = (rng.random((n, m)) < 0.5).astype(np.float64)
+    A[np.arange(n), rng.integers(0, m, size=n)] = 1.0  # no empty block
+    A[rng.integers(0, n, size=m), np.arange(m)] = 1.0  # no idle machine
+    return Assignment(A=A, name="irregular")
+
+
+def check_batched_matches_scalar(A: Assignment, masks: np.ndarray,
+                                 method: str, p: float) -> None:
+    W, alphas = sw.batched_step_weights(A, masks, method=method, p=p)
+    assert W.shape == masks.shape and alphas.shape == (len(masks), A.n)
+    for t, alive in enumerate(masks):
+        w_t, a_t = sw.step_weights(A, alive, method=method, p=p)
+        np.testing.assert_array_equal(W[t], w_t)
+        np.testing.assert_array_equal(alphas[t], a_t)
+        assert not np.any(W[t][~alive]), "stragglers must carry w = 0"
+
+
+def check_block_weights_linear(A: Assignment, W: np.ndarray) -> None:
+    V = sw.block_weights(A, W)
+    assert V.shape == (W.shape[0], A.n)
+    for t, w in enumerate(W):
+        # GEMM rows vs GEMV agree to reduction-order rounding only (the
+        # weights here are arbitrary floats, unlike the exact-count
+        # fixed path); the scalar form IS A @ w by definition.
+        np.testing.assert_allclose(V[t], sw.block_weights(A, w),
+                                   rtol=1e-12, atol=1e-14)
+        np.testing.assert_array_equal(sw.block_weights(A, w), A.A @ w)
+    # linearity: block_weights(a u + b v) == a block_weights(u) + ...
+    if len(W) >= 2:
+        u, v = W[0], W[1]
+        np.testing.assert_allclose(
+            sw.block_weights(A, 2.0 * u - 0.5 * v),
+            2.0 * sw.block_weights(A, u) - 0.5 * sw.block_weights(A, v),
+            rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("method,p", [("optimal", 0.0), ("fixed", 0.3)])
+def test_batched_step_weights_matches_scalar_seeded(seed, method, p):
+    rng = np.random.default_rng(seed)
+    A = random_assignment(rng)
+    masks = rng.random((5, A.m)) >= rng.uniform(0.1, 0.6)
+    check_batched_matches_scalar(A, masks, method, p)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_block_weights_linearity_seeded(seed):
+    rng = np.random.default_rng(100 + seed)
+    A = random_assignment(rng)
+    W = rng.random((4, A.m)) * (rng.random((4, A.m)) > 0.3)
+    check_block_weights_linear(A, W)
+
+
+def test_batched_step_weights_scale_and_empty():
+    rng = np.random.default_rng(7)
+    A = random_assignment(rng)
+    masks = rng.random((3, A.m)) >= 0.4
+    W1, a1 = sw.batched_step_weights(A, masks, scale=1.0)
+    W2, a2 = sw.batched_step_weights(A, masks, scale=2.5)
+    np.testing.assert_allclose(W2, 2.5 * W1, rtol=1e-12)
+    np.testing.assert_allclose(a2, 2.5 * a1, rtol=1e-12)
+    W0, a0 = sw.batched_step_weights(
+        A, np.zeros((0, A.m), dtype=bool))
+    assert W0.shape == (0, A.m) and a0.shape == (0, A.n)
+
+
+if HAS_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           method_p=st.sampled_from([("optimal", 0.0), ("fixed", 0.25),
+                                     ("fixed", 0.6)]),
+           trials=st.integers(1, 6),
+           thresh=st.floats(0.0, 0.9))
+    def test_batched_step_weights_matches_scalar_hyp(seed, method_p,
+                                                     trials, thresh):
+        method, p = method_p
+        rng = np.random.default_rng(seed)
+        A = random_assignment(rng)
+        masks = rng.random((trials, A.m)) >= thresh
+        check_batched_matches_scalar(A, masks, method, p)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1), rows=st.integers(1, 5))
+    def test_block_weights_linearity_hyp(seed, rows):
+        rng = np.random.default_rng(seed)
+        A = random_assignment(rng)
+        W = rng.standard_normal((rows, A.m))
+        check_block_weights_linear(A, W)
