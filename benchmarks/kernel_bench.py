@@ -1,13 +1,21 @@
-"""Kernel micro-benchmarks: wall time of the pure-jnp reference path on
-CPU (the Pallas kernels are TPU-targeted; interpret-mode timing is a
-Python emulation and not meaningful, so it is validated for
-correctness in tests and only counted here), plus derived bandwidth.
-Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""Declarative kernel bench-and-tolerance registry.
+
+One ``KernelSpec`` per kernel: name -> (timed op, oracle, shape maker,
+rtol). ``run_specs`` times the op (wall time of the pure-jnp reference
+path on CPU -- the Pallas kernels are TPU-targeted; interpret-mode
+timing is a Python emulation and not meaningful, so kernels are
+validated for correctness in tests and only *counted* here), checks it
+against its oracle at the registered tolerance, and emits the
+``name,us_per_call,derived`` CSV rows per the harness contract. New
+kernels -- e.g. serve-path decode shapes -- get bench rows and oracle
+checks by appending a spec, not by copy-pasting a timing block.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +25,7 @@ from repro.core.batched_decoding import batched_optimal_alpha_graph
 from repro.core.graphs import random_regular_graph
 from repro.kernels.batched_alpha import ref as ba_ref
 from repro.kernels.coded_combine import ref as cc_ref
-from repro.kernels.decode_attention import ref as da_ref
+from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
 from repro.kernels.rmsnorm import ref as rn_ref
 from repro.kernels.spectral_matvec import ref as sm_ref
 
@@ -32,82 +40,171 @@ def _time(fn, *args, reps=20):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def batched_alpha_rows(fast: bool = False):
-    """Rows for the batched decoding subsystem: the fused error
-    reduction oracle and end-to-end engine throughput per backend."""
-    rng = np.random.default_rng(1)
-    rows = []
-
-    trials, n = (512, 1024) if fast else (2048, 2048)
-    a = rng.normal(loc=1.0, scale=0.1, size=(trials, n))
-    us = _time(ba_ref.fused_error, a, 1.01, reps=10)
-    gb = a.size * 8 / 1e9
-    rows.append(("batched_alpha_fused_error_ref", us,
-                 f"{gb / (us / 1e6):.1f}GB/s"))
-
-    g = random_regular_graph(256, 4, seed=0)  # m=512 machines
-    t_b = 256 if fast else 1024
-    masks = rng.random((t_b, g.m)) >= 0.2
-    for backend in ("numpy", "jax"):
-        fn = lambda m_: batched_optimal_alpha_graph(g, m_, backend=backend)
-        us = _time(fn, masks, reps=3)
-        rows.append((f"batched_alpha_engine_{backend}", us,
-                     f"{t_b / (us / 1e6):.0f}trials/s"))
-    return rows
+def _gbps(nbytes: int):
+    """derived-column formatter: effective bandwidth from bytes moved."""
+    return lambda us: f"{nbytes / 1e9 / (us / 1e6):.1f}GB/s"
 
 
-def main(fast: bool = False):
+def _rate(count: int, unit: str):
+    return lambda us: f"{count / (us / 1e6):.0f}{unit}"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel benchmark.
+
+    ``make(fast)`` builds the argument tuple and the derived-column
+    formatter; ``op`` is timed; ``oracle`` (optional) is evaluated once
+    on the same arguments and compared at ``rtol`` -- the registration
+    IS the tolerance contract.
+    """
+    name: str
+    make: Callable[[bool], Tuple[tuple, Callable[[float], str]]]
+    op: Callable
+    oracle: Optional[Callable] = None
+    rtol: float = 1e-5
+    atol: float = 1e-6
+    reps: int = 20
+
+
+def _mk_rmsnorm(fast: bool):
     rng = np.random.default_rng(0)
-    rows = []
-
-    rows_n = 2048 if fast else 8192
-    x = jnp.asarray(rng.normal(size=(rows_n, 1024)), jnp.float32)
+    rows = 2048 if fast else 8192
+    x = jnp.asarray(rng.normal(size=(rows, 1024)), jnp.float32)
     s = jnp.asarray(rng.normal(size=1024), jnp.float32)
-    f = jax.jit(rn_ref.rmsnorm)
-    us = _time(f, x, s)
-    gb = 2 * x.size * 4 / 1e9
-    rows.append(("rmsnorm_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+    return (x, s), _gbps(2 * x.size * 4)
 
-    B, H, KVH, S, Dh = 4, 16, 4, (2048 if fast else 8192), 128
+
+def _mk_decode_attention(fast: bool, *, B=4, H=16, KVH=4, S=None,
+                         Dh=128, seed=0):
+    rng = np.random.default_rng(seed)
+    S = S if S is not None else (2048 if fast else 8192)
     q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(B, S, KVH, Dh)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(B, S, KVH, Dh)), jnp.float32)
     lengths = jnp.full((B,), S, jnp.int32)
-    f = jax.jit(da_ref.decode_attention)
-    us = _time(f, q, k, v, lengths)
-    gb = 2 * k.size * 4 / 1e9
-    rows.append(("decode_attention_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+    return (q, k, v, lengths), _gbps(2 * k.size * 4)
 
+
+def _mk_decode_attention_pool(fast: bool):
+    # The serving pool's shape regime: n_slots rows, ragged fill (each
+    # request at a different position), short-ish caches.
+    args, _ = _mk_decode_attention(fast, B=16, H=16, KVH=4,
+                                   S=(512 if fast else 2048), Dh=128,
+                                   seed=1)
+    q, k, v, _ = args
+    lengths = jnp.asarray(
+        np.random.default_rng(1).integers(1, k.shape[1] + 1, k.shape[0]),
+        jnp.int32)
+    return (q, k, v, lengths), _gbps(2 * k.size * 4)
+
+
+def _mk_coded_combine(fast: bool):
+    rng = np.random.default_rng(0)
     nb, D = 16, (1 << 20 if fast else 1 << 22)
     g = jnp.asarray(rng.normal(size=(nb, D)), jnp.float32)
     w = jnp.asarray(rng.normal(size=nb), jnp.float32)
-    f = jax.jit(cc_ref.coded_combine)
-    us = _time(f, g, w)
-    gb = g.size * 4 / 1e9
-    rows.append(("coded_combine_ref", us, f"{gb / (us / 1e6):.1f}GB/s"))
+    return (g, w), _gbps(g.size * 4)
 
-    # Matrix-free spectral pipeline: tall-skinny Gram matvec oracle at
-    # the transposed LPS covariance orientation (n=2184 rows, 30 cols).
+
+def _mk_gram(fast: bool):
+    # Tall-skinny Gram matvec oracle at the transposed LPS covariance
+    # orientation (x streamed twice per matvec).
+    rng = np.random.default_rng(0)
     R, k = (2184, 30) if fast else (8736, 64)
     x = rng.normal(size=(R, k))
     v = rng.normal(size=k)
-    us = _time(sm_ref.gram_matvec, x, v, reps=50)
-    gb = 2 * x.size * 8 / 1e9  # x streamed twice per matvec
-    rows.append(("spectral_matvec_gram_ref", us,
-                 f"{gb / (us / 1e6):.1f}GB/s"))
+    return (x, v), _gbps(2 * x.size * 8)
 
-    # Lockstep/batched form (the campaign's blocked-Lanczos matvec):
-    # all B slices per call, at the regime-2 campaign stack size.
+
+def _mk_gram_batch(fast: bool):
+    # Lockstep/batched form (the campaign's blocked-Lanczos matvec) at
+    # the regime-2 campaign stack size.
+    rng = np.random.default_rng(0)
+    R, k = (2184, 30) if fast else (8736, 64)
     B = 12
     xb = rng.normal(size=(B, R, k))
     vb = rng.normal(size=(B, k))
-    us_b = _time(sm_ref.gram_matvec_batch, xb, vb, reps=20)
-    gb_b = 2 * xb.size * 8 / 1e9
-    rows.append(("spectral_matvec_gram_batch_ref", us_b,
-                 f"{gb_b / (us_b / 1e6):.1f}GB/s"))
+    return (xb, vb), _gbps(2 * xb.size * 8)
 
+
+def _mk_fused_error(fast: bool):
+    rng = np.random.default_rng(1)
+    trials, n = (512, 1024) if fast else (2048, 2048)
+    a = rng.normal(loc=1.0, scale=0.1, size=(trials, n))
+    return (a, 1.01), _gbps(a.size * 8)
+
+
+def _alpha_engine(backend):
+    g = random_regular_graph(256, 4, seed=0)  # m=512 machines
+    return lambda masks: batched_optimal_alpha_graph(
+        g, masks, backend=backend)
+
+
+def _mk_alpha_engine(fast: bool):
+    rng = np.random.default_rng(1)
+    t_b = 256 if fast else 1024
+    masks = rng.random((t_b, 512)) >= 0.2
+    return (masks,), _rate(t_b, "trials/s")
+
+
+REGISTRY: List[KernelSpec] = [
+    KernelSpec("rmsnorm_ref", _mk_rmsnorm, jax.jit(rn_ref.rmsnorm)),
+    KernelSpec("decode_attention_ref", _mk_decode_attention,
+               jax.jit(da_ref.decode_attention),
+               oracle=da_ops.decode_attention, rtol=1e-5),
+    KernelSpec("decode_attention_serve_pool", _mk_decode_attention_pool,
+               jax.jit(da_ref.decode_attention),
+               oracle=da_ops.decode_attention, rtol=1e-5),
+    KernelSpec("coded_combine_ref", _mk_coded_combine,
+               jax.jit(cc_ref.coded_combine)),
+    KernelSpec("spectral_matvec_gram_ref", _mk_gram, sm_ref.gram_matvec,
+               reps=50),
+    KernelSpec("spectral_matvec_gram_batch_ref", _mk_gram_batch,
+               sm_ref.gram_matvec_batch, reps=20),
+]
+
+# Batched decoding subsystem: the fused error reduction oracle and
+# end-to-end engine throughput per backend. The jax engine's oracle is
+# the numpy engine -- a genuine cross-backend check.
+BATCHED_ALPHA_REGISTRY: List[KernelSpec] = [
+    KernelSpec("batched_alpha_fused_error_ref", _mk_fused_error,
+               ba_ref.fused_error,
+               oracle=lambda a, s: np.mean((a * s - 1.0) ** 2, axis=1),
+               rtol=1e-12, reps=10),
+    KernelSpec("batched_alpha_engine_numpy", _mk_alpha_engine,
+               _alpha_engine("numpy"), reps=3),
+    KernelSpec("batched_alpha_engine_jax", _mk_alpha_engine,
+               _alpha_engine("jax"), oracle=_alpha_engine("numpy"),
+               rtol=1e-9, reps=3),
+]
+
+
+def run_specs(specs: Sequence[KernelSpec], fast: bool = False):
+    """Time + oracle-check each spec; returns (name, us, derived) rows."""
+    rows = []
+    for spec in specs:
+        args, derived = spec.make(fast)
+        if spec.oracle is not None:
+            got = np.asarray(spec.op(*args))
+            want = np.asarray(spec.oracle(*args))
+            np.testing.assert_allclose(
+                got, want, rtol=spec.rtol, atol=spec.atol,
+                err_msg=f"{spec.name}: op diverged from oracle")
+        us = _time(spec.op, *args, reps=spec.reps)
+        rows.append((spec.name, us, derived(us)))
+    return rows
+
+
+def batched_alpha_rows(fast: bool = False):
+    """Rows for the batched decoding subsystem (reused standalone by
+    ``benchmarks.run`` for the decoding report)."""
+    return run_specs(BATCHED_ALPHA_REGISTRY, fast)
+
+
+def main(fast: bool = False):
+    rows = run_specs(REGISTRY, fast)
     rows.extend(batched_alpha_rows(fast=fast))
-
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows

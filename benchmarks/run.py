@@ -2,9 +2,11 @@
 
 ``python -m benchmarks.run [--fast|--full]`` -- fast mode by default so
 the whole suite stays in CPU-minutes; --full uses the paper-scale
-settings (m=6552 LPS regime etc.). Every run also emits two
-machine-readable perf reports (whenever ``decoding_error`` is in the
-selected suites):
+settings (m=6552 LPS regime etc.). Every run also emits machine-
+readable perf reports: ``BENCH_train.json`` (train_step suite),
+``BENCH_serve.json`` (serve suite: coded-serving tokens/s + synthetic
+TTFT p50/p99 with inline acceptance), and, whenever
+``decoding_error`` is in the selected suites:
 
 * ``BENCH_decoding.json`` -- trials/sec for the scalar vs batched
   straggler-decoding paths plus the batched_alpha kernel rows.
@@ -35,13 +37,16 @@ def main() -> None:
                     help="fast mode (the default unless --full is given)")
     ap.add_argument("--only", default=None,
                     help="comma list: decoding_error,convergence,"
-                         "adversarial,bounds,kernels,roofline,train_step")
+                         "adversarial,bounds,kernels,roofline,"
+                         "train_step,serve")
     ap.add_argument("--bench-json", default="BENCH_decoding.json",
                     help="where to write the decoding perf report")
     ap.add_argument("--sweep-json", default="BENCH_sweep.json",
                     help="where to write the grid-sweep perf report")
     ap.add_argument("--train-json", default="BENCH_train.json",
                     help="where to write the dist train-step report")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="where to write the coded-serving report")
     args = ap.parse_args()
     if args.full and args.fast:
         ap.error("--fast and --full are mutually exclusive")
@@ -49,7 +54,8 @@ def main() -> None:
 
     from benchmarks import (adversarial, bounds, convergence,
                             decoding_error, expansion_ablation,
-                            kernel_bench, roofline_report, train_step)
+                            kernel_bench, roofline_report, serve_bench,
+                            train_step)
     suite = {
         "decoding_error": decoding_error.main,   # Fig 3
         "convergence": convergence.main,         # Fig 4/5
@@ -59,6 +65,7 @@ def main() -> None:
         "kernels": kernel_bench.main,            # TPU-adaptation layer
         "roofline": roofline_report.main,        # Dry-run #Roofline
         "train_step": train_step.main,           # repro.dist mesh runtime
+        "serve": serve_bench.main,               # coded serving engine
     }
     wanted = args.only.split(",") if args.only else list(suite)
     t0 = time.time()
@@ -86,6 +93,20 @@ def main() -> None:
               f"vs replicated {repl['step_ms']:.1f} ms/step "
               f"({repl['step_ms'] / uncoded['step_ms']:.2f}x) vs "
               f"uncoded {uncoded['step_ms']:.1f} ms/step")
+
+    if results.get("serve"):
+        report = dict(results["serve"])
+        report["mode"] = "fast" if fast else "full"
+        with open(args.serve_json, "w") as f:
+            json.dump(report, f, indent=2)
+        acc = report["acceptance"]
+        eng = report["engine"]["coded"]
+        print(f"wrote {args.serve_json}: coded engine "
+              f"{eng['tokens_per_s']:.1f} tok/s, sim p99 coded "
+              f"{acc['coded_p99_ms']:.2f} ms vs uncoded "
+              f"{acc['uncoded_p99_ms']:.2f} ms, "
+              f"bit_identical_at_p0="
+              f"{acc['token_stream_bit_identical_at_p0']}")
 
     if args.only is not None and "decoding_error" not in wanted:
         # A filtered run of unrelated suites shouldn't pay for (or

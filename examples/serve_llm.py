@@ -1,8 +1,11 @@
-"""Batched serving example: prefill + autoregressive decode with the
-per-architecture cache (KV cache / SSM state / xLSTM state). Wraps
-repro.launch.serve.
+"""Batched serving example: continuous-batching engine with the
+per-architecture cache (KV cache / SSM state / xLSTM state), uncoded
+single-replica prefill. Wraps repro.launch.serve.
 
     PYTHONPATH=src python examples/serve_llm.py [--arch ...]
+
+See examples/serve_lm_coded.py for the d-replicated coded prefill
+variant with bounded TTFT tails.
 """
 
 import sys
@@ -12,8 +15,9 @@ from repro.launch import serve
 
 def main():
     argv = sys.argv[1:] or [
-        "--arch", "xlstm-1.3b", "--batch", "4", "--prompt-len", "16",
-        "--new-tokens", "12", "--max-len", "64",
+        "--arch", "xlstm-1.3b", "--scheme", "uncoded", "--requests", "8",
+        "--slots", "4", "--prompt-len", "16", "--max-new-tokens", "12",
+        "--max-len", "64",
     ]
     serve.main(argv)
 

@@ -119,6 +119,23 @@ def block_weights(assignment: Assignment, w: np.ndarray) -> np.ndarray:
     raise ValueError(f"w must be (m,) or (T, m), got ndim={w.ndim}")
 
 
+def served_blocks(assignment: Assignment, w: np.ndarray,
+                  eps: float = 1e-3) -> np.ndarray:
+    """Which blocks the decoded weights can actually reconstruct:
+    alpha_i = (A w)_i > eps.
+
+    Training tolerates alpha_i ~ 0 (that block's gradient is simply
+    missing from the unbiased combine this round); serving cannot -- a
+    prefill shard with no usable combine weight has no output to emit,
+    so the engine retries it next round. This is the serving-side view
+    of the same decode: w_j = 0 on stragglers implies alpha_i > 0 only
+    when some arrived replica covers block i.
+
+    Accepts (m,) -> (n,) bool, or batched (T, m) -> (T, n) bool.
+    """
+    return block_weights(assignment, w) > eps
+
+
 def batched_step_weights(assignment: Assignment, masks, *,
                          method: str = "optimal", p: float = 0.0,
                          scale: float = 1.0

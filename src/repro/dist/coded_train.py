@@ -488,3 +488,59 @@ class CodingRuntime:
                 self._cache[k] = w_by_key[k]
         W = np.stack([w_by_key[k] for k in keys])
         return W, alive
+
+
+class LookaheadPrefetcher:
+    """``weights_lookahead`` off the main thread, bit-identically.
+
+    The train driver's steady-state loop used to stall every
+    ``horizon`` steps while ``CodingRuntime.weights_lookahead`` sampled
+    and batch-decoded the next chunk on the main thread -- invisible at
+    smoke m, a real bubble at very large m where one optimal decode is
+    O(m) python. This wrapper runs the same calls on the driver's
+    single batch-builder executor, prefetching chunk k+1 while the
+    device consumes chunk k.
+
+    Bit-identity with the synchronous path is by construction, not by
+    luck: the prefetcher issues the *same* ``weights_lookahead(k)``
+    calls in the same order against the same runtime, merely from the
+    worker thread, and chunk sizes are capped by the remaining step
+    budget exactly like the inline code was -- so RNG consumption,
+    memo-cache state, and the (W, alive) stream match the per-step
+    loop sample for sample (pinned in tests/test_coding_runtime.py).
+    The runtime itself is only ever touched from the worker thread
+    after construction; ``block_weights`` (pure, RNG-free) remains
+    safe to call from the main thread.
+    """
+
+    def __init__(self, runtime: CodingRuntime, pool, horizon: int,
+                 total_steps: int):
+        if horizon < 1:
+            raise ValueError("horizon must be >= 1")
+        self.runtime = runtime
+        self.pool = pool
+        self.horizon = horizon
+        self.remaining = total_steps
+        self._chunk = None
+        self._cursor = 0
+        self._future = self._submit()
+
+    def _submit(self):
+        k = min(self.horizon, self.remaining)
+        if k < 1:
+            return None
+        self.remaining -= k
+        return self.pool.submit(self.runtime.weights_lookahead, k)
+
+    def next(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The next round's (w (m,) float32, alive (m,) bool)."""
+        if self._chunk is None or self._cursor == len(self._chunk[0]):
+            if self._future is None:
+                raise RuntimeError("lookahead stream exhausted")
+            self._chunk = self._future.result()
+            self._cursor = 0
+            self._future = self._submit()   # prefetch the next chunk
+        W, alive = self._chunk
+        t = self._cursor
+        self._cursor += 1
+        return W[t], alive[t]

@@ -141,6 +141,16 @@ def safe_param_specs(params, mesh: Mesh):
         treedef, [spec_for(path, leaf) for path, leaf in flat])
 
 
+def cache_batch_dim(keys: Tuple[str, ...]) -> int:
+    """Which dim of a decode-cache leaf is the batch (request-slot)
+    axis: per-layer stacked leaves carry a leading layer axis so batch
+    is dim 1; the unstacked encoder output ("enc") has batch leading.
+    Shared by ``cache_specs`` and the serving cache pool's slot-reset
+    mask so the two can never disagree about where a request's state
+    lives."""
+    return 0 if (keys and keys[0] == "enc") else 1
+
+
 def cache_specs(cache, mesh: Mesh, *, batch_replicated: bool = False):
     """Decode-cache PartitionSpecs: shard the batch dim over the data
     axes (dim 1 for the per-layer stacked leaves, dim 0 for the
@@ -155,7 +165,7 @@ def cache_specs(cache, mesh: Mesh, *, batch_replicated: bool = False):
         keys = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
                      for k in path)
         shape = tuple(leaf.shape)
-        batch_dim = 0 if (keys and keys[0] == "enc") else 1
+        batch_dim = cache_batch_dim(keys)
         if (batch_replicated or len(shape) <= batch_dim
                 or n_data <= 1 or shape[batch_dim] % n_data):
             return P()

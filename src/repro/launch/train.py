@@ -14,8 +14,9 @@ driver takes the full configs and the production mesh.
 The loop is an async pipeline: shardings and the jitted step are built
 once up front (shapes are static across steps), host batch construction
 is double-buffered against device compute on a worker thread, straggler
-masks are pre-sampled and decoded ``--lookahead`` rounds at a time
-through one ``CodingRuntime.weights_lookahead`` call, and metrics stay
+masks are pre-sampled and decoded ``--lookahead`` rounds at a time on
+that same worker thread (``coded_train.LookaheadPrefetcher``, one chunk
+ahead of the device), and metrics stay
 on device (alpha-bar included) until a ``--log-every`` boundary -- the
 host never blocks on the device inside the steady-state loop.
 
@@ -211,8 +212,12 @@ def main(argv=None) -> dict:
 
         losses = []
         metrics_hist = []          # device scalars, flushed at logs
-        W_chunk = alive_chunk = None
-        cursor = 0
+        # Straggler sampling + batched decode run on the same worker
+        # thread as batch building, one chunk ahead of the device
+        # (bit-identical to the old inline calls -- see
+        # LookaheadPrefetcher).
+        lookahead_w = coded_train.LookaheadPrefetcher(
+            runtime, pool, lookahead, args.steps - start)
         pending = None
         t0 = time.time()
 
@@ -244,12 +249,7 @@ def main(argv=None) -> dict:
                 pending = pool.submit(host_batch, step + 1)
             batch = {k: jax.device_put(jnp.asarray(v), bshard[k])
                      for k, v in batch_np.items()}
-            if W_chunk is None or cursor == len(W_chunk):
-                W_chunk, alive_chunk = runtime.weights_lookahead(
-                    min(lookahead, args.steps - step))
-                cursor = 0
-            w, alive = W_chunk[cursor], alive_chunk[cursor]
-            cursor += 1
+            w, alive = lookahead_w.next()
             wv = runtime.block_weights(w) if dedup else w
             wv = jax.device_put(jnp.asarray(wv, jnp.float32), repl)
             params, opt_state, metrics = step_fn(params, opt_state,

@@ -1,0 +1,62 @@
+"""Continuous-batching coded serving: bounded-p99 prefill via the
+paper's replicate-and-decode machinery.
+
+The engine (``engine.ServeEngine``) packs per-request decode state --
+KV, SSM, or xLSTM caches -- into a fixed slot pool
+(``cache_pool.CachePool``, sharded by the same ``dist.sharding`` rules
+as training caches) and advances every slot one token per jitted step:
+prefill is prompt replay interleaved token-for-token with decode
+(``scheduler.ContinuousScheduler``), so a long prompt can never starve
+a decoding request. The host loop is async in the ``launch/train``
+style: token buffers stay on device and are fetched + scattered into
+per-request streams on a worker thread at log boundaries.
+
+The replica-as-straggler model
+------------------------------
+Serving tail latency is a straggler problem: replicate each prefill
+shard d=2 times across mesh replica slices with
+``core.assignment.expander_assignment`` (shards are the expander's
+vertices, replica slices its edges), model per-replica latency with
+the existing ``core.stragglers`` processes -- a "straggler" is now a
+replica answering after the scheduler's deadline -- and combine
+whichever replicas arrive first with the weights w from the paper's
+optimal O(m) decoder (``coded.CodedPrefillLayer``). Since replicas of
+a shard compute *identical* outputs, the combine degenerates to
+scaling the shard's logits by its own alpha_i = (A w)_i; a shard with
+no usable weight (both replicas late, alpha_i ~ 0, see
+``core.step_weights.served_blocks``) pays one deadline and retries.
+p50 stays at the single-replica latency; p99 is bounded by the
+straggler model (one deadline + retries at probability ~ p^d) instead
+of by the slowest device, which is what the uncoded d=1 baseline waits
+for (``latency.ReplicaLatencyModel``, ``latency.simulate_shard_ttft``).
+
+The differential pin
+--------------------
+Per the repo convention, the fast path names its oracle: when no
+straggler fires (p=0) every alpha_i is exactly 1.0 and the coded-serve
+token stream is **bit-identical** to the single-replica serve stream;
+independently, the continuous-batching engine's per-request streams
+are bit-identical to ``reference.sequential_serve`` -- a simple
+static-batching loop over the same jitted pool step -- under any
+admission order. Both pins live in tests/test_serve_engine.py and run
+as inline acceptance checks in ``benchmarks/serve_bench.py``
+(BENCH_serve.json). MoE's expert-choice routing couples batch rows and
+is the documented exception to the bit-identity guarantee.
+"""
+
+from .cache_pool import CachePool
+from .coded import CodedPrefillLayer, ShardService, UncodedPrefillLayer
+from .engine import ServeEngine, pool_step, validate_budget
+from .latency import (ReplicaLatencyModel, percentile_row,
+                      simulate_shard_ttft)
+from .reference import sequential_serve
+from .scheduler import (ContinuousScheduler, IterationPlan, Request,
+                        SequentialScheduler)
+
+__all__ = [
+    "CachePool", "CodedPrefillLayer", "ContinuousScheduler",
+    "IterationPlan", "ReplicaLatencyModel", "Request", "ServeEngine",
+    "SequentialScheduler", "ShardService", "UncodedPrefillLayer",
+    "percentile_row", "pool_step", "sequential_serve",
+    "simulate_shard_ttft", "validate_budget",
+]

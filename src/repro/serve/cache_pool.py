@@ -1,0 +1,58 @@
+"""Fixed-slot device cache pool: per-request state paging.
+
+The pool is a single pytree from ``models.model.init_decode_cache``
+with ``n_slots`` as its batch dimension -- KV tensors (with their
+per-row write positions) for the attention families, SSM / xLSTM
+recurrent state for the others. A request "page" is one batch row
+across every leaf; admission zero-resets that row in place through one
+jitted, buffer-donating masked select, so slots are reused without any
+allocation or host round trip. Which dim is the slot axis comes from
+``dist.sharding.cache_batch_dim`` -- the same rule ``cache_specs``
+uses to shard the pool over the mesh's data axes, so paging and
+sharding agree by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as rules
+from repro.models import model as M
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_slots(cache, mask):
+    """Zero the masked batch rows of every cache leaf, in place."""
+    def reset(path, leaf):
+        keys = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        bd = rules.cache_batch_dim(keys)
+        shape = [1] * leaf.ndim
+        shape[bd] = leaf.shape[bd]
+        m = mask.reshape(shape)
+        return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+    return jax.tree_util.tree_map_with_path(reset, cache)
+
+
+class CachePool:
+    """n_slots request pages over one ``init_decode_cache`` pytree."""
+
+    def __init__(self, cfg, n_slots: int, max_len: int, *, mesh=None,
+                 src_len: int = 0):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        cache = M.init_decode_cache(cfg, n_slots, max_len,
+                                    src_len=src_len)
+        if mesh is not None:
+            shard = rules.named(mesh, rules.cache_specs(cache, mesh))
+            cache = jax.device_put(cache, shard)
+        self.cache = cache
+
+    def reset_slots(self, mask) -> None:
+        """Zero the slots where ``mask`` (n_slots,) bool is True."""
+        self.cache = _zero_slots(self.cache, jnp.asarray(mask))

@@ -1,0 +1,63 @@
+"""Sequential-batching reference loop: the scheduler's oracle.
+
+Deliberately naive -- admit the next ``n_slots`` requests as a static
+batch, replay every prompt through the decode path, greedy-decode the
+whole group to completion (finished rows keep stepping harmlessly),
+then move to the next group, syncing tokens to the host every
+iteration. It shares exactly one thing with the engine: the jitted
+``engine.pool_step`` computation, so any divergence between this loop
+and the engine's streams is a scheduling/paging bug, never a numerics
+difference. tests/test_serve_engine.py pins the two bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+from .engine import pool_step
+from .scheduler import Request
+
+
+def sequential_serve(params, cfg, requests: List[Request], *,
+                     n_slots: int, max_len: int,
+                     window: Optional[int] = None
+                     ) -> Dict[int, np.ndarray]:
+    window = window if window is not None else cfg.sliding_window
+    step_fn = pool_step(cfg, window)
+    ones = jnp.ones(n_slots, jnp.float32)
+    out: Dict[int, list] = {r.uid: [] for r in requests}
+    for g0 in range(0, len(requests), n_slots):
+        group = requests[g0:g0 + n_slots]
+        cache = M.init_decode_cache(cfg, n_slots, max_len)
+        prev = jnp.zeros(n_slots, jnp.int32)
+        consumed = [0] * len(group)
+        emitted = [0] * len(group)
+        while any(e < r.max_new_tokens
+                  for e, r in zip(emitted, group)):
+            forced = np.zeros(n_slots, np.int32)
+            use = np.zeros(n_slots, bool)
+            emits = []
+            for i, req in enumerate(group):
+                P = req.prompt.shape[0]
+                if consumed[i] < P:
+                    forced[i] = req.prompt[consumed[i]]
+                    use[i] = True
+                    consumed[i] += 1
+                    if consumed[i] == P:
+                        emits.append(i)
+                        emitted[i] = 1
+                elif emitted[i] < req.max_new_tokens:
+                    emits.append(i)
+                    emitted[i] += 1
+            prev, cache = step_fn(params, cache, prev,
+                                  jnp.asarray(forced),
+                                  jnp.asarray(use), ones)
+            toks = np.asarray(prev)
+            for i in emits:
+                out[group[i].uid].append(int(toks[i]))
+    return {uid: np.asarray(v, np.int32) for uid, v in out.items()}

@@ -146,6 +146,37 @@ def test_weights_lookahead_dedups_stagnant_masks():
         rt.weights_lookahead(0)
 
 
+@pytest.mark.parametrize("model", ["bernoulli", "markov"])
+def test_lookahead_prefetcher_equals_per_step(model):
+    """The async prefetcher (train driver's batch-builder thread) must
+    replay the synchronous per-step loop bit-for-bit: same RNG
+    consumption, same decodes, same (w, alive) stream -- including a
+    total not divisible by the horizon, where the final chunk must be
+    capped by the remaining budget exactly like the old inline code."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    steps, horizon = 23, 6   # 23 % 6 != 0: last chunk is short
+    rt_sync = _runtime(straggler_model=model, straggler_p=0.3, seed=9)
+    rt_pre = _runtime(straggler_model=model, straggler_p=0.3, seed=9)
+    sync = [rt_sync.step_weights() for _ in range(steps)]
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        pre_fetch = coded_train.LookaheadPrefetcher(
+            rt_pre, pool, horizon, steps)
+        pre = [pre_fetch.next() for _ in range(steps)]
+        with pytest.raises(RuntimeError):
+            pre_fetch.next()   # budget exhausted, no silent resample
+    np.testing.assert_array_equal(np.stack([a for _, a in sync]),
+                                  np.stack([a for _, a in pre]))
+    np.testing.assert_array_equal(np.stack([w for w, _ in sync]),
+                                  np.stack([w for w, _ in pre]))
+    assert rt_pre.steps_sampled == rt_sync.steps_sampled == steps
+
+
+def test_lookahead_prefetcher_rejects_bad_horizon():
+    with pytest.raises(ValueError):
+        coded_train.LookaheadPrefetcher(_runtime(), None, 0, 10)
+
+
 def test_block_weights_scalar_and_batched():
     A = expander_assignment(M_WORKERS, 2, vertex_transitive=True, seed=0)
     rng = np.random.default_rng(3)

@@ -1,0 +1,316 @@
+"""Continuous-batching coded serving: scheduler, cache pool, coded
+prefill layer, latency model, and the two differential pins.
+
+The pins, per the repo convention (every fast path names its oracle):
+
+* scheduling invisibility -- the engine's per-request token streams
+  under continuous admission are bit-identical to the sequential-
+  batching reference loop (``serve.reference.sequential_serve``) over
+  the same jitted pool step;
+* coding invisibility at p=0 -- with no straggler fired every combine
+  weight is exactly 1.0, so the coded-serve stream is bit-identical to
+  the uncoded single-replica stream.
+
+Engine tests run at pool width 4 on the dense smoke config (the
+SSM/xLSTM state families get the same treatment in
+tests/test_serve_steps.py; MoE's expert-choice routing couples batch
+rows and is the documented exception to bit-identity).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.step_weights as sw
+from repro.configs import CodingConfig, get_config
+from repro.core import expander_assignment
+from repro.models import model as M
+from repro import serve as S
+
+SEED = 0
+
+
+def _requests(cfg, n, rng, base_len=6, spread=3, new_tokens=4):
+    return [S.Request(uid=i,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          base_len - (i % (spread + 1))),
+                      max_new_tokens=new_tokens + (i % 2))
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen1.5-4b").smoke_variant()
+    params = M.init_params(cfg, jax.random.PRNGKey(SEED))
+    return cfg, params
+
+
+# ---------------------------------------------------------------- pins
+
+def test_engine_matches_sequential_reference(dense):
+    """Scheduling must change when tokens appear, never what they are:
+    continuous admission (mixed prompt lengths, slot reuse across
+    multiple admission waves) == the static-batching oracle."""
+    cfg, params = dense
+    reqs = _requests(cfg, 7, np.random.default_rng(1))
+    eng = S.ServeEngine(cfg, params, n_slots=4, max_len=32, log_every=3)
+    for r in reqs:
+        eng.submit(r)
+    summary = eng.run()
+    assert summary["requests"] == 7
+    assert summary["admissions"] == 7
+    res = eng.results()
+    ref = S.sequential_serve(params, cfg, reqs, n_slots=4, max_len=32)
+    for r in reqs:
+        assert len(res[r.uid]) == r.max_new_tokens
+        np.testing.assert_array_equal(res[r.uid], ref[r.uid])
+
+
+def test_coded_stream_equals_uncoded_at_p0(dense):
+    """The tentpole pin: no straggler fired => alpha_i == 1.0 exactly
+    => the coded-serve stream is bit-identical to the single-replica
+    serve stream."""
+    cfg, params = dense
+    reqs = _requests(cfg, 6, np.random.default_rng(2))
+
+    def run(scheme, p):
+        coding = CodingConfig(scheme=scheme, replication=2,
+                              straggler_model="bernoulli",
+                              straggler_p=p, seed=SEED)
+        eng = S.ServeEngine(cfg, params, n_slots=4, max_len=32,
+                            coding=coding, m_replicas=8, log_every=4)
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng
+
+    coded = run("expander", 0.0)
+    uncoded = run("uncoded", 0.0)
+    for r in reqs:
+        assert coded.records[r.uid]["alpha"] == 1.0
+        np.testing.assert_array_equal(coded.results()[r.uid],
+                                      uncoded.results()[r.uid])
+
+
+def test_engine_stream_invariant_under_straggler_p(dense):
+    """Replica compute is deterministic: stragglers change latency
+    bookkeeping (retries, TTFT), never the tokens."""
+    cfg, params = dense
+    reqs = _requests(cfg, 5, np.random.default_rng(3))
+
+    def run(p):
+        coding = CodingConfig(scheme="expander", replication=2,
+                              straggler_model="bernoulli",
+                              straggler_p=p, seed=SEED)
+        eng = S.ServeEngine(cfg, params, n_slots=4, max_len=32,
+                            coding=coding, m_replicas=8)
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng.results()
+
+    r0, r05 = run(0.0), run(0.5)
+    for r in reqs:
+        np.testing.assert_array_equal(r0[r.uid], r05[r.uid])
+
+
+# ----------------------------------------------------------- scheduler
+
+def test_continuous_scheduler_interleaves_prefill_and_decode():
+    sched = S.ContinuousScheduler(n_slots=2)
+    sched.submit(S.Request(uid=0, prompt=np.arange(1, 4),
+                           max_new_tokens=2))
+    plan = sched.plan()
+    assert [b for b, _ in plan.admitted] == [0]
+    assert plan.use_forced[0] and plan.forced_tok[0] == 1
+    assert plan.emits == []
+    # a second request admitted mid-prefill lands in the free slot and
+    # prefills while slot 0 keeps advancing -- no starvation
+    sched.submit(S.Request(uid=1, prompt=np.array([9]),
+                           max_new_tokens=1))
+    plan = sched.plan()
+    assert [b for b, _ in plan.admitted] == [1]
+    assert plan.forced_tok.tolist() == [2, 9]
+    # uid 1's single prompt token makes this its first+last emission
+    assert (1, 1, True) in plan.emits
+    assert plan.finished == [1]
+    plan = sched.plan()   # uid 0 consumes its last prompt token
+    assert (0, 0, True) in plan.emits
+    plan = sched.plan()   # decode emission completes uid 0
+    assert plan.emits == [(0, 0, False)]
+    assert plan.finished == [0]
+    assert not sched.has_work()
+
+
+def test_sequential_scheduler_is_static_batching():
+    sched = S.SequentialScheduler(n_slots=2)
+    for i in range(3):
+        sched.submit(S.Request(uid=i, prompt=np.array([1, 2]),
+                               max_new_tokens=1))
+    assert len(sched.plan().admitted) == 2
+    # queue non-empty but the pool is busy: no admission until drained
+    plan = sched.plan()
+    assert plan.admitted == [] and plan.finished == [0, 1]
+    assert [r.uid for _, r in sched.plan().admitted] == [2]
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        S.Request(uid=0, prompt=np.array([], np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError):
+        S.Request(uid=0, prompt=np.array([1]), max_new_tokens=0)
+
+
+def test_validate_budget_rejects_overflow():
+    import dataclasses
+    cfg = get_config("qwen1.5-4b").smoke_variant()
+    S.validate_budget(cfg, 8, 8, 16)
+    with pytest.raises(ValueError, match="overflows the decode cache"):
+        S.validate_budget(cfg, 8, 9, 16)
+    with pytest.raises(ValueError, match="prompt_len"):
+        S.validate_budget(cfg, 0, 4, 16)
+    # windowed attention wraps its cache: no capacity bound
+    wcfg = dataclasses.replace(cfg, sliding_window=8)
+    S.validate_budget(wcfg, 8, 64, 16)
+
+
+# ------------------------------------------------- coded prefill layer
+
+def _coding(p, model="bernoulli", seed=0):
+    return CodingConfig(scheme="expander", replication=2,
+                        straggler_model=model, straggler_p=p, seed=seed)
+
+
+def test_coded_layer_alpha_one_at_p0():
+    layer = S.CodedPrefillLayer(_coding(0.0), 8)
+    for svc in layer.serve_shards(layer.assign_shards(8)):
+        assert svc.alpha == 1.0        # exactly: the p=0 pin relies on it
+        assert svc.retries == 0
+        assert svc.ttft_ms < layer.latency.deadline_ms
+
+
+def test_coded_layer_serves_from_arrived_replicas():
+    layer = S.CodedPrefillLayer(_coding(0.4, seed=3), 8)
+    served = [layer.serve_shards(layer.assign_shards(4))
+              for _ in range(40)]
+    retried = sum(svc.retries for group in served for svc in group)
+    assert retried > 0                  # p=0.4 double-straggles often
+    for group in served:
+        for svc in group:
+            assert svc.alpha > 0
+            # each retry costs one deadline before the serving round's
+            # fastest-arrived-replica latency
+            assert svc.ttft_ms >= svc.retries * layer.latency.deadline_ms
+
+
+def test_coded_layer_adversarial_waits_out_pinned_replicas():
+    """The adversarial mask never moves: a shard both of whose replicas
+    it pins can only be served by waiting the stragglers out."""
+    layer = S.CodedPrefillLayer(_coding(0.3, model="adversarial"), 8,
+                                max_retries=4)
+    services = layer.serve_shards(list(range(layer.assignment.n)))
+    waited = [s for s in services
+              if s.ttft_ms >= layer.latency.straggle_ms]
+    alive = layer.model.sample(np.random.default_rng(0))
+    dead_shards = [
+        i for i in range(layer.assignment.n)
+        if not alive[layer.assignment.machines_of_block(i)].any()]
+    assert len(waited) == len(dead_shards)
+    for s in waited:
+        assert s.alpha == 1.0           # full-alive decode after the wait
+
+
+def test_uncoded_layer_waits_out_its_single_replica():
+    layer = S.UncodedPrefillLayer(_coding(0.5, seed=1), 8)
+    ttfts = [svc.ttft_ms for _ in range(40)
+             for svc in layer.serve_shards(layer.assign_shards(8))]
+    lat = layer.latency
+    slow = [t for t in ttfts if t > lat.straggle_ms]
+    fast = [t for t in ttfts if t < lat.deadline_ms]
+    assert slow and fast                # both modes, nothing in between
+    assert len(slow) + len(fast) == len(ttfts)
+
+
+# ------------------------------------------------------- latency model
+
+def test_latency_model_alive_means_arrived():
+    lat = S.ReplicaLatencyModel(m=16)
+    rng = np.random.default_rng(0)
+    alive = rng.random(16) >= 0.5
+    t = lat.latencies(alive, rng)
+    assert (t[alive] < lat.deadline_ms).all()
+    assert (t[~alive] > lat.straggle_ms).all()
+    with pytest.raises(ValueError):
+        S.ReplicaLatencyModel(m=4, deadline_ms=1.0)  # < base_ms
+
+
+def test_simulate_shard_ttft_bounds_the_tail():
+    """The bench's acceptance in miniature: d=2 coded p99 is one
+    deadline + retries (~ p^2), uncoded p99 is the slowest device."""
+    m, rounds, p = 16, 2000, 0.2
+    A = expander_assignment(m, 2, vertex_transitive=True, seed=0)
+    rng = np.random.default_rng(0)
+    alive = rng.random((rounds, m)) >= p
+    W, _ = sw.batched_step_weights(A, alive)
+    lat_model = S.ReplicaLatencyModel(m=m)
+    lat = np.stack([lat_model.latencies(a, rng) for a in alive])
+    coded, uncoded = S.simulate_shard_ttft(
+        A, W, alive, lat, deadline_ms=lat_model.deadline_ms,
+        straggle_ms=lat_model.straggle_ms)
+    assert coded.shape == (rounds, A.n)
+    c99 = np.percentile(coded, 99)
+    u99 = np.percentile(uncoded, 99)
+    assert c99 < u99
+    assert u99 > lat_model.straggle_ms            # waits out stragglers
+    # p50 unchanged: both sit at the base-latency plateau
+    assert abs(np.percentile(coded, 50)
+               - np.percentile(uncoded, 50)) < 1.0
+    # at p=0 every shard is served round 0 by its fastest replica
+    alive0 = np.ones((8, m), bool)
+    W0, _ = sw.batched_step_weights(A, alive0)
+    lat0 = np.stack([lat_model.latencies(a, rng) for a in alive0])
+    coded0, _ = S.simulate_shard_ttft(
+        A, W0, alive0, lat0, deadline_ms=lat_model.deadline_ms,
+        straggle_ms=lat_model.straggle_ms)
+    want = np.stack([lat0[:, A.machines_of_block(i)].min(axis=1)
+                     for i in range(A.n)], axis=1)
+    np.testing.assert_allclose(coded0, want)
+
+
+def test_served_blocks_matches_alpha_support():
+    A = expander_assignment(8, 2, vertex_transitive=True, seed=0)
+    masks = np.random.default_rng(0).random((16, A.m)) >= 0.4
+    W, alphas = sw.batched_step_weights(A, masks)
+    np.testing.assert_array_equal(sw.served_blocks(A, W),
+                                  alphas > 1e-3)
+    w, alpha = sw.step_weights(A, masks[0])
+    np.testing.assert_array_equal(sw.served_blocks(A, w),
+                                  alpha > 1e-3)
+
+
+# ----------------------------------------------------------- cache pool
+
+def test_cache_pool_reset_zeroes_only_masked_slots(dense):
+    from repro.dist import sharding as rules
+    cfg, params = dense
+    pool = S.CachePool(cfg, 4, 16)
+    step = S.pool_step(cfg, cfg.sliding_window)
+    # populate the pool with one real decode step first
+    _, pool.cache = step(
+        params, pool.cache, jax.numpy.zeros(4, "int32"),
+        jax.numpy.asarray(np.array([3, 1, 4, 1], "int32")),
+        jax.numpy.ones(4, bool), jax.numpy.ones(4, "float32"))
+    before = jax.tree_util.tree_flatten_with_path(
+        jax.device_get(pool.cache))[0]
+    pool.reset_slots(np.array([True, False, False, False]))
+    after = jax.tree_util.tree_flatten_with_path(
+        jax.device_get(pool.cache))[0]
+    assert any(np.asarray(leaf).any() for _, leaf in before)
+    for (path, old), (_, new) in zip(before, after):
+        keys = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        bd = rules.cache_batch_dim(keys)
+        old_s = np.moveaxis(old, bd, 0)
+        new_s = np.moveaxis(new, bd, 0)
+        assert not new_s[0].any()                      # slot 0 zeroed
+        np.testing.assert_array_equal(new_s[1:], old_s[1:])

@@ -1,0 +1,100 @@
+"""``make_prefill_step`` / ``make_serve_step`` across the decode-state
+families the serving engine pages: KV (dense attention), SSM+KV
+(hybrid), and xLSTM recurrent state.
+
+The contract the cache pool leans on: replaying a shared prompt prefix
+through the serve step then greedy-decoding N tokens is equivalent to
+running the full-sequence forward at every step -- same logits at the
+prefix boundary (to fp tolerance; incremental attention reorders the
+reductions) and the *same greedy tokens* thereafter. The engine's own
+8-virtual-device mesh path over these steps is exercised end to end by
+tests/test_smoke_serve.py via the CLI subprocess.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist import coded_train
+from repro.models import model as M
+
+# one config per decode-state family: KV / SSM+KV hybrid / xLSTM
+FAMILY_ARCHS = ["qwen1.5-4b", "zamba2-1.2b", "xlstm-1.3b"]
+
+B, P, N, MAX_LEN = 2, 6, 4, 24
+
+
+def _setup(arch):
+    cfg = get_config(arch).smoke_variant()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (B, P)),
+        jnp.int32)
+    return cfg, params, tokens
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prefill_step_is_last_position_forward(arch):
+    cfg, params, tokens = _setup(arch)
+    prefill = coded_train.make_prefill_step(cfg)
+    full = M.forward(params, tokens, cfg)[:, -1]
+    np.testing.assert_allclose(
+        np.asarray(prefill(params, {"tokens": tokens})),
+        np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prefix_replay_then_decode_matches_full_forward(arch):
+    """Prefill-then-N-decode-steps == full-sequence forward on the
+    shared prefix: same boundary logits, then bit-equal greedy tokens
+    step for step."""
+    cfg, params, tokens = _setup(arch)
+    serve_step = jax.jit(coded_train.make_serve_step(cfg))
+    V = cfg.vocab_size
+
+    cache = M.init_decode_cache(cfg, B, MAX_LEN)
+    logits = None
+    for t in range(P):
+        logits, cache = serve_step(params, tokens[:, t], cache)
+    boundary = M.prefill(params, tokens, cfg)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(boundary),
+                               rtol=2e-3, atol=2e-3)
+
+    seq = tokens
+    for _ in range(N):
+        tok_dec = jnp.argmax(logits[:, :V], axis=-1).astype(jnp.int32)
+        # oracle: re-run the whole sequence through the full forward
+        tok_full = jnp.argmax(
+            M.forward(params, seq, cfg)[:, -1, :V], axis=-1)
+        np.testing.assert_array_equal(np.asarray(tok_dec),
+                                      np.asarray(tok_full))
+        seq = jnp.concatenate([seq, tok_dec[:, None]], axis=1)
+        logits, cache = serve_step(params, tok_dec, cache)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_decode_rows_are_independent(arch):
+    """The property the pool's slot paging (and the scheduling
+    bit-identity pin) rests on: a row's decode stream is unchanged by
+    what the other rows compute."""
+    cfg, params, tokens = _setup(arch)
+    serve_step = jax.jit(coded_train.make_serve_step(cfg))
+
+    def decode_row0(other_row):
+        toks = jnp.stack([tokens[0], other_row])
+        cache = M.init_decode_cache(cfg, B, MAX_LEN)
+        out = []
+        logits = None
+        for t in range(P):
+            logits, cache = serve_step(params, toks[:, t], cache)
+        for _ in range(3):
+            tok = jnp.argmax(logits[:, :cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            out.append(int(tok[0]))
+            logits, cache = serve_step(params, tok, cache)
+        return out
+
+    assert decode_row0(tokens[1]) == decode_row0(tokens[1][::-1])
