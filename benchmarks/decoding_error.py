@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import (adjacency_assignment, decode, expander_assignment,
                         monte_carlo_error, random_regular_graph, spectral,
                         sweep_campaign, sweep_error, theory)
+from repro.core.compress import compression_campaign
 
 P_GRID = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3)
 
@@ -148,6 +149,14 @@ def sweep_report() -> Dict:
     ``sweep_error`` loop on the same grid -- with its own inline
     acceptance: bit-identical mean/std, cov within tolerance, and a
     >= 1.25x hard speedup floor (measured ~1.6-2.0x).
+
+    Also runs the compression campaign (error vs p vs bits) at the
+    regime-1 m=24 d=3 scheme: none/sign/int8 codecs under optimal
+    decoding plus the majority-vote signSGD degenerate fixed decoding,
+    with inline sanity acceptance -- int8 stays within 10% (+1e-3
+    absolute floor) of the uncompressed decoding error at every p,
+    while both sign entries sit strictly above it (1-bit quantization
+    noise dominates the straggler term at this scale).
     """
     m, d, trials = 6552, 6, 30
     A = expander_assignment(m, d, vertex_transitive=True, seed=0)
@@ -263,6 +272,34 @@ def sweep_report() -> Dict:
             f"campaign speedup {campaign_speedup:.2f}x < 1.25x over the "
             f"sequential per-scheme loop ({seq_s:.3f}s vs {camp_s:.3f}s)")
 
+    # Compression grid: error vs p vs bits at the regime-1 scheme
+    # (m=24, d=3 -- the campaign simulates dim-512 gradient vectors per
+    # trial, so the paper-scale m=6552 scheme would dominate the whole
+    # report for no extra signal).
+    A_c = expander_assignment(24, 3, vertex_transitive=False, seed=1)
+    comp_trials, comp_dim = 200, 512
+    t0 = time.perf_counter()
+    comp_rows = compression_campaign(A_c, P_GRID, trials=comp_trials,
+                                     dim=comp_dim, seed=0)
+    comp_s = time.perf_counter() - t0
+    by_p: Dict[float, Dict[str, float]] = {}
+    for r in comp_rows:
+        by_p.setdefault(r["p"], {})[
+            f"{r['codec']}:{r['decoding']}"] = r["mean_error"]
+    for p, errs in by_p.items():
+        none_e = errs["none:optimal"]
+        if errs["int8:optimal"] > none_e * 1.10 + 1e-3:
+            raise AssertionError(
+                f"int8 decoding error {errs['int8:optimal']:.3e} at "
+                f"p={p} exceeds 1.10x uncompressed ({none_e:.3e}) "
+                f"+ 1e-3: 8-bit quantization noise should be in the "
+                f"straggler-error noise floor")
+        for key in ("sign:optimal", "sign:majority_vote"):
+            if errs[key] <= none_e:
+                raise AssertionError(
+                    f"{key} error {errs[key]:.3e} at p={p} should "
+                    f"exceed the uncompressed error {none_e:.3e}")
+
     return {
         "regime2_grid": {
             "m": m, "d": d, "n": n, "graph": "LPS X^{5,13}",
@@ -294,6 +331,12 @@ def sweep_report() -> Dict:
             "lambda2_lanczos_seconds": lam2_lanczos_s,
             "lambda2_abs_diff": abs(lam2_lanczos - lam2_dense),
             "circulant_fft_seconds": fft_s,
+        },
+        "compression_grid": {
+            "m": A_c.m, "d": 3, "graph": "random 3-regular",
+            "p_grid": list(P_GRID), "trials": comp_trials,
+            "dim": comp_dim, "seconds": comp_s,
+            "rows": comp_rows,
         },
         "note": ("per_point = historical monte_carlo_error loop (dense "
                  "covariance SVD per p); sweep = sweep_error (shared "

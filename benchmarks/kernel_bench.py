@@ -107,6 +107,34 @@ def _mk_coded_combine(fast: bool):
     return (g, w), _gbps(g.size * 4)
 
 
+def _mk_quantized_combine(nb: int, codec: str):
+    """Quantized-combine bench inputs: int8 payload (full int8 grid or
+    sign's {-1, 0, 1}) + per-row scales + decode weights with
+    straggler zeros. The derived column reports effective bandwidth
+    over the *compressed* bytes actually streamed -- 1 byte/component
+    vs the float32 combine's 4."""
+    def make(fast: bool):
+        rng = np.random.default_rng(0)
+        D = 1 << 20 if fast else 1 << 22
+        if codec == "sign":
+            payload = np.sign(rng.normal(size=(nb, D)))
+        else:
+            payload = rng.integers(-127, 128, size=(nb, D))
+        q = jnp.asarray(payload, jnp.int8)
+        s = jnp.asarray(rng.uniform(0.5, 1.5, size=nb), jnp.float32)
+        w = rng.normal(size=nb).astype(np.float32)
+        w[rng.random(nb) < 0.2] = 0.0  # decoded straggler weights
+        return (q, s, jnp.asarray(w)), _gbps(q.size)
+    return make
+
+
+@jax.jit
+def _dequantized_combine_oracle(q, s, w):
+    """Materialise the float32 gradients and run the plain combine --
+    exactly the allocation the fused path exists to avoid."""
+    return cc_ref.coded_combine(q.astype(jnp.float32) * s[:, None], w)
+
+
 def _mk_gram(fast: bool):
     # Tall-skinny Gram matvec oracle at the transposed LPS covariance
     # orientation (x streamed twice per matvec).
@@ -158,6 +186,31 @@ REGISTRY: List[KernelSpec] = [
                oracle=da_ops.decode_attention, rtol=1e-5),
     KernelSpec("coded_combine_ref", _mk_coded_combine,
                jax.jit(cc_ref.coded_combine)),
+    # Compression-composed combine: replicated (nb = m = 16) and dedup
+    # (nb = n = 32) row counts, int8 and sign payloads, each checked
+    # against the dequantize-then-combine float32 oracle. The chain
+    # and the einsum differ only by float32 accumulation order, hence
+    # the scaled-atol style tolerance.
+    KernelSpec("quantized_combine_int8_ref",
+               _mk_quantized_combine(16, "int8"),
+               jax.jit(cc_ref.quantized_combine),
+               oracle=_dequantized_combine_oracle, rtol=2e-5, atol=1e-3,
+               reps=10),
+    KernelSpec("quantized_combine_sign_ref",
+               _mk_quantized_combine(16, "sign"),
+               jax.jit(cc_ref.quantized_combine),
+               oracle=_dequantized_combine_oracle, rtol=2e-5, atol=1e-3,
+               reps=10),
+    KernelSpec("quantized_combine_int8_dedup_ref",
+               _mk_quantized_combine(32, "int8"),
+               jax.jit(cc_ref.quantized_combine),
+               oracle=_dequantized_combine_oracle, rtol=2e-5, atol=1e-3,
+               reps=10),
+    KernelSpec("quantized_combine_sign_dedup_ref",
+               _mk_quantized_combine(32, "sign"),
+               jax.jit(cc_ref.quantized_combine),
+               oracle=_dequantized_combine_oracle, rtol=2e-5, atol=1e-3,
+               reps=10),
     KernelSpec("spectral_matvec_gram_ref", _mk_gram, sm_ref.gram_matvec,
                reps=50),
     KernelSpec("spectral_matvec_gram_batch_ref", _mk_gram_batch,

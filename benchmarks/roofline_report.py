@@ -1,7 +1,14 @@
 """Assemble the #Roofline table from the dry-run JSON artifacts
 (experiments/dryrun/*.json): per (arch x shape x mesh), the three
 roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a
-one-line what-would-move-it-down note."""
+one-line what-would-move-it-down note.
+
+``comm_report`` is the communication-side companion over the measured
+train-step report (BENCH_train.json): per-run comm-bytes-per-step
+against the float32 baseline at the same row count, with the inline
+acceptance that the int8 codec cuts the combine's wire payload to
+<= 0.3x float32 at replication d = 2 -- the compression side of the
+comms-tax story the coded combine carries."""
 
 from __future__ import annotations
 
@@ -52,6 +59,50 @@ def table(rows: List[dict]) -> str:
             f"| {dom} | {rl['useful_flops_ratio']:.2f} "
             f"| {NOTES[dom]} |")
     return "\n".join(out)
+
+
+def comm_report(train_report: dict) -> List[dict]:
+    """Comm-bytes table + acceptance over a train_step report.
+
+    Each run row already carries measured ``comm_bytes_per_step`` (the
+    payload arrays its combine consumed) and the float32 baseline at
+    the same (machine/block) row count. Prints the per-run ratio table
+    and enforces: every int8 run ships <= 0.3x the float32 bytes
+    (at d = 2 the exact ratio is ~0.25: 1 byte/component + one float32
+    scale per row-leaf pair, against 4 bytes/component).
+    """
+    runs = [r for r in train_report.get("runs", [])
+            if "comm_bytes_per_step" in r]
+    if not runs:
+        print("# comm_report: no comm-bytes columns in train report")
+        return []
+    out = []
+    print("| scheme | path | compress | comm MB/step | f32 MB/step "
+          "| ratio |")
+    print("|---|---|---|---|---|---|")
+    for r in runs:
+        ratio = r["comm_bytes_per_step"] / r["comm_bytes_per_step_float32"]
+        out.append({"scheme": r["scheme"], "path": r["path"],
+                    "compress": r.get("compress", "none"),
+                    "comm_bytes_per_step": r["comm_bytes_per_step"],
+                    "comm_bytes_per_step_float32":
+                        r["comm_bytes_per_step_float32"],
+                    "ratio": round(ratio, 4)})
+        print(f"| {r['scheme']} | {r['path']} "
+              f"| {r.get('compress', 'none')} "
+              f"| {r['comm_bytes_per_step'] / 1e6:.2f} "
+              f"| {r['comm_bytes_per_step_float32'] / 1e6:.2f} "
+              f"| {ratio:.3f} |")
+        if r.get("compress") == "int8":
+            assert ratio <= 0.3, (
+                f"int8 comm ratio {ratio:.3f} must be <= 0.3x float32 "
+                f"({r['scheme']}/{r['path']})")
+        if r.get("compress", "none") == "none":
+            assert ratio == 1.0, "uncompressed runs must ship 1.0x"
+    assert any(r["compress"] == "int8" for r in out), \
+        "train report must carry an int8 compression run"
+    print(f"# comm_report: {len(out)} rows, int8 acceptance <= 0.3x ok")
+    return out
 
 
 def main(fast: bool = False):

@@ -83,9 +83,9 @@ def main() -> None:
         runs = report["runs"]
         repl = train_step.find_run(runs, scheme="expander",
                                    path="replicated",
-                                   collective="gspmd")
+                                   collective="gspmd", compress="none")
         dedup = train_step.find_run(runs, scheme="expander",
-                                    path="dedup")
+                                    path="dedup", compress="none")
         uncoded = train_step.find_run(runs, scheme="uncoded")
         print(f"wrote {args.train_json}: coded dedup "
               f"{dedup['step_ms']:.1f} ms/step "
@@ -93,6 +93,8 @@ def main() -> None:
               f"vs replicated {repl['step_ms']:.1f} ms/step "
               f"({repl['step_ms'] / uncoded['step_ms']:.2f}x) vs "
               f"uncoded {uncoded['step_ms']:.1f} ms/step")
+        # comm-bytes companion table + int8 <= 0.3x acceptance
+        roofline_report.comm_report(report)
 
     if results.get("serve"):
         report = dict(results["serve"])
@@ -151,6 +153,10 @@ def main() -> None:
           f"({camp['speedup']:.2f}x), "
           f"bit_identical={camp['bit_identical_mean_std']}, "
           f"cov_rel={camp['cov_norm_max_rel_diff']:.2e}")
+    cg = sweep["compression_grid"]
+    print(f"compression grid: {len(cg['rows'])} "
+          f"error-vs-p-vs-bits rows in {cg['seconds']:.2f}s "
+          f"(codecs x p x decoding incl. majority-vote signSGD)")
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 
 

@@ -10,12 +10,15 @@ mesh of virtual CPU devices):
   (sample + cached O(m) optimal decode) and the batched
   ``decode_batch`` path, in microseconds.
 
-Four rows: the replicated coded step (GSPMD combine), the
+Six rows: the replicated coded step (GSPMD combine), the
 deduplicated coded step (each unique block once, weighted by
 v = A @ w -- the path that closes the replication-factor gap), the
-manual ``coded_allreduce`` collective, and the uncoded baseline. The
+manual ``coded_allreduce`` collective, the uncoded baseline, and the
+compression-composed dedup steps (int8 / sign through the fused
+quantized combine, with measured comm-bytes-per-step columns). The
 inline acceptance check pins the dedup step strictly under the
-replicated one.
+replicated one; the comm-bytes acceptance (int8 <= 0.3x float32)
+lives in ``roofline_report.comm_report``.
 
 The measurement loop runs in a subprocess because the virtual-device
 count must land in XLA_FLAGS before jax initialises; ``main`` (the
@@ -36,12 +39,14 @@ N_DEVICES = 8
 
 def _measure_one(scheme: str, decoding: str, *, steps: int,
                  seq_len: int, block_size: int, path: str = "replicated",
-                 collective: str = "gspmd") -> dict:
+                 collective: str = "gspmd",
+                 compress: str = "none") -> dict:
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import CodingConfig, get_config
+    from repro.core import compress as compress_mod
     from repro.data.pipeline import CodedBatcher, SyntheticLM
     from repro.dist import coded_train, sharding as rules
     from repro.launch.mesh import make_test_mesh
@@ -49,6 +54,8 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
     from repro.optim import optimizers as opt_mod
 
     dedup = path == "dedup"
+    codec = (None if compress == "none"
+             else compress_mod.get_codec(compress))
     cfg = get_config("qwen1.5-4b").smoke_variant()
     mesh = make_test_mesh((N_DEVICES // 2, 2))
     m_workers = mesh.shape["data"]
@@ -67,13 +74,17 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
     pshard = rules.named(mesh, rules.safe_param_specs(params, mesh))
     repl = rules.replicated(mesh)
 
+    comp_rows = assignment.n if dedup else m_workers
+    comp_state = (compress_mod.init_state(params, comp_rows)
+                  if codec else None)
     if collective == "manual":
         train_step = coded_train.make_manual_collective_train_step(
-            cfg, optimizer, mesh)
+            cfg, optimizer, mesh, compress=compress if codec else None)
     else:
         train_step = coded_train.make_train_step(
             cfg, optimizer, dedup=dedup,
-            norm_scale=coded_train.dedup_norm_scale(assignment))
+            norm_scale=coded_train.dedup_norm_scale(assignment),
+            compress=compress if codec else None)
     step_times, decode_times = [], []
     with mesh:
         params = jax.device_put(params, pshard)
@@ -82,9 +93,16 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
         batch0 = emit(source.batch(global_batch, 0))
         bshard = (rules.block_shardings if dedup
                   else rules.batch_shardings)(mesh, batch0)
-        step_fn = jax.jit(train_step,
-                          in_shardings=(pshard, None, bshard, repl),
-                          out_shardings=(pshard, None, None))
+        if codec:
+            comp_state = jax.device_put(comp_state, repl)
+            step_fn = jax.jit(
+                train_step,
+                in_shardings=(pshard, None, repl, bshard, repl),
+                out_shardings=(pshard, None, repl, None))
+        else:
+            step_fn = jax.jit(train_step,
+                              in_shardings=(pshard, None, bshard, repl),
+                              out_shardings=(pshard, None, None))
         for step in range(steps):
             batch_np = batch0 if step == 0 else \
                 emit(source.batch(global_batch, step))
@@ -96,8 +114,12 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
             decode_times.append(time.perf_counter() - t0)
             wv = jax.device_put(jnp.asarray(wv, jnp.float32), repl)
             t0 = time.perf_counter()
-            params, opt_state, metrics = step_fn(params, opt_state,
-                                                 batch, wv)
+            if codec:
+                params, opt_state, comp_state, metrics = step_fn(
+                    params, opt_state, comp_state, batch, wv)
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch, wv)
             jax.block_until_ready(metrics["loss"])
             step_times.append(time.perf_counter() - t0)
     warm = step_times[2:] or step_times  # first steps pay compile
@@ -108,11 +130,20 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
     t0 = time.perf_counter()
     runtime.decode_batch(masks)
     batched_us = (time.perf_counter() - t0) / masks.shape[0] * 1e6
+    # Measured comm payload: the bytes of the arrays the combine
+    # actually consumed this run (quantized payload + scale sideband,
+    # or full float32 gradients), next to the float32 baseline at the
+    # same row count -- the columns the roofline comm report audits.
+    comm = compress_mod.comm_bytes_per_step(codec, comp_rows, params)
+    comm_f32 = compress_mod.comm_bytes_per_step(None, comp_rows, params)
     return {
         "scheme": scheme,
         "decoding": decoding,
         "path": path,
         "collective": collective,
+        "compress": compress,
+        "comm_bytes_per_step": comm,
+        "comm_bytes_per_step_float32": comm_f32,
         "m_workers": m_workers,
         "global_batch": global_batch,
         "seq_len": seq_len,
@@ -138,6 +169,12 @@ def worker(full: bool) -> None:
             _measure_one("expander", "optimal", path="replicated",
                          collective="manual", **kw),
             _measure_one("uncoded", "fixed", path="replicated", **kw),
+            # compression-composed rows: same dedup geometry, int8 and
+            # sign codecs through the fused quantized combine
+            _measure_one("expander", "optimal", path="dedup",
+                         compress="int8", **kw),
+            _measure_one("expander", "optimal", path="dedup",
+                         compress="sign", **kw),
         ],
     }
     print("BENCH_TRAIN_JSON:" + json.dumps(report))
@@ -167,14 +204,17 @@ def main(fast: bool = True) -> dict:
     report = json.loads(line.split(":", 1)[1])
     for run in report["runs"]:
         label = f"{run['scheme']}/{run['path']}/{run['collective']}"
+        if run.get("compress", "none") != "none":
+            label += f"/{run['compress']}"
         print(f"  {label}: {run['step_ms']:.1f} ms/step, "
               f"{run['tokens_per_s']:.0f} tok/s, decode "
               f"{run['decode_us_per_step']:.0f} us/step "
               f"(batched {run['decode_us_per_mask_batched']:.0f} us/mask)")
     runs = report["runs"]
     repl = find_run(runs, scheme="expander", path="replicated",
-                    collective="gspmd")
-    dedup = find_run(runs, scheme="expander", path="dedup")
+                    collective="gspmd", compress="none")
+    dedup = find_run(runs, scheme="expander", path="dedup",
+                     compress="none")
     uncoded = find_run(runs, scheme="uncoded")
     # Acceptance: deduplication must beat recomputing every block d
     # times; host decode must stay off the step critical path.

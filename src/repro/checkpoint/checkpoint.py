@@ -73,6 +73,29 @@ def latest_step(path: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def restore_any(path: str, templates, step: Optional[int] = None
+                ) -> Tuple[str, Any]:
+    """Restore into the first matching template of an ordered list.
+
+    ``templates`` is a sequence of (label, like) pairs tried in order;
+    returns (label, restored). The checkpoint layout has grown over
+    PRs (params-only -> {params, opt_state} -> {params, opt_state,
+    compress}), and the driver must accept any of them: a mismatched
+    template fails ``restore``'s leaf-count/shape validation
+    (ValueError) or the npz key lookup (KeyError), and the next one is
+    tried. Raises ValueError listing every failure if none match --
+    never silently loads a torn or foreign checkpoint.
+    """
+    failures = []
+    for label, like in templates:
+        try:
+            return label, restore(path, like, step=step)
+        except (ValueError, KeyError) as e:
+            failures.append(f"{label}: {e}")
+    raise ValueError("no checkpoint template matched: "
+                     + "; ".join(failures))
+
+
 def restore(path: str, like: Any, step: Optional[int] = None) -> Any:
     """Restore into the structure of ``like`` (shapes validated)."""
     if step is None:

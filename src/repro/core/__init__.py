@@ -15,6 +15,9 @@ Public surface of the paper's core contribution:
 - step_weights: the shared straggler-sample -> decode -> debiased
                step-weights pipeline (single-host GCOD and the
                repro.dist mesh runtime both sit on it)
+- compress:    gradient compression codecs (int8 / signSGD) composed
+               with the coded combine, error-feedback state, and the
+               error-vs-p-vs-bits campaign grid
 - theory:      the paper's closed-form bounds
 - debias:      Prop B.1 black-box debiasing
 - coded_gd:    Algorithms 2 & 3 (single-host logical view)
@@ -50,6 +53,8 @@ from .stragglers import (StragglerModel, BernoulliStragglers,
 from .step_weights import (make_straggler_model, sample_mask_stream,
                            batched_step_weights, debias_scale_mc)
 from . import step_weights  # the module: step_weights.step_weights etc.
+from . import compress
+from .compress import (Codec, get_codec, compression_campaign)
 from . import theory
 from .debias import debias_assignment, estimate_mean_alpha
 from .coded_gd import (LeastSquares, GDTrace, gcod, precompute_alphas,
@@ -78,6 +83,7 @@ __all__ = [
     "adversarial_mask_graph", "adversarial_mask_frc",
     "step_weights", "make_straggler_model", "sample_mask_stream",
     "batched_step_weights", "debias_scale_mc",
+    "compress", "Codec", "get_codec", "compression_campaign",
     "theory", "debias_assignment", "estimate_mean_alpha",
     "LeastSquares", "GDTrace", "gcod", "precompute_alphas", "sgd_alg",
     "uncoded_gd",

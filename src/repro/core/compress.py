@@ -1,0 +1,252 @@
+"""Gradient compression codecs composed with the coded combine.
+
+ROADMAP open item: compose the paper's straggler code with gradient
+compression and study the error interaction. The machines' messages
+``g_j`` are quantized before the decode-weighted combine
+``sum_j w_j g_j``; the combine itself then runs directly on the
+quantized payload (``kernels.coded_combine.quantized_combine``
+dequantizes, w-weights and reduces in one pass), so the d-fold comms
+tax of replication shrinks by the codec's wire ratio.
+
+Codecs (per-tensor symmetric, one scale per machine per leaf):
+
+* ``none``  -- float32 passthrough (scale 1): the oracle the quantized
+  path is differential-tested against, and the float32 comm baseline.
+* ``int8``  -- symmetric round-to-nearest-even onto [-127, 127] with
+  scale = amax * (1/127) (amax = 0 rows keep scale 1 so q = 0 exactly).
+* ``sign``  -- signSGD with the L1 scale of Bernstein et al.
+  (arXiv:1802.04434): payload sign(g), scale = mean|g|. 1 bit of
+  information per component; the wire container here is int8 (the
+  smallest TPU-native dtype -- bit-packing is a transport-layer detail
+  the ``bits``/``wire_bits`` split keeps honest).
+
+Every codec is written once over a generic array namespace ``xp`` and
+exposed for both jnp (on-device, inside the jitted train step) and
+numpy (the host-side round-trip reference the property tests pin
+against): the int8 round/clip/cast chain is elementwise IEEE and
+matches bitwise across the two; the sign codec's mean reduction is
+summation-order sensitive, so only it carries a tolerance.
+
+Error feedback
+--------------
+``init_state`` allocates the per-machine residual pytree that rides
+alongside ``opt_state`` (and is checkpointed with it): each step
+compresses ``g_t + e_t`` and keeps ``e_{t+1} = g_t + e_t - dequant``.
+The telescoping identity ``sum_t dequant_t = sum_t g_t + e_0 - e_T``
+(pinned in tests/test_compress.py) is what turns the biased sign codec
+into a convergent method, and carrying ``e`` in the checkpoint is what
+keeps resumed runs bit-identical.
+
+``compression_campaign`` is the error-vs-p-vs-bits grid the source
+paper does not have: the decoding-error floor of each straggler
+probability composed with each codec's quantization noise, plus
+majority-vote signSGD (fixed all-alive voting, no decoding weights) as
+the degenerate fixed-decoding entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import step_weights as sw
+from .assignment import Assignment
+from .sweep import bernoulli_uniforms
+
+
+# ---------------------------------------------------------------------------
+# Codecs (xp-generic: xp is jnp on device, np for the host reference)
+# ---------------------------------------------------------------------------
+
+
+def _none_compress(g, xp):
+    g = g.astype(xp.float32)
+    return g, xp.ones(g.shape[:-1], xp.float32)
+
+
+def _none_decompress(q, scale, xp):
+    return q.astype(xp.float32) * scale[..., None]
+
+
+def _int8_compress(g, xp):
+    g = g.astype(xp.float32)
+    amax = xp.max(xp.abs(g), axis=-1)
+    # amax * (1/127), NOT amax / 127: XLA strength-reduces division by
+    # a compile-time constant into a reciprocal multiply that is
+    # occasionally 1 ulp off the IEEE quotient, which would break the
+    # np/jnp bitwise contract this codec carries. A multiply is
+    # exactly rounded on both sides; the division by the *runtime*
+    # scale below stays a true fdiv.
+    scale = xp.where(amax > 0, amax * xp.float32(1.0 / 127.0),
+                     xp.ones_like(amax)).astype(xp.float32)
+    q = xp.clip(xp.round(g / scale[..., None]), -127, 127).astype(xp.int8)
+    return q, scale
+
+
+def _sign_compress(g, xp):
+    g = g.astype(xp.float32)
+    scale = xp.mean(xp.abs(g), axis=-1).astype(xp.float32)
+    q = xp.sign(g).astype(xp.int8)
+    return q, scale
+
+
+def _q_decompress(q, scale, xp):
+    return q.astype(xp.float32) * scale[..., None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One compression scheme: rows-of-components -> (payload, scale).
+
+    ``compress(g)`` takes (..., D) float and returns a (..., D) payload
+    (int8 for the quantized codecs, float32 for 'none') plus a (...,)
+    float32 per-row scale; ``decompress`` is the exact float32
+    round-trip ``payload * scale``. ``bits`` is the information content
+    per component (the campaign's bits axis: 32 / 8 / 1); ``wire_bits``
+    is the container actually shipped (sign rides an int8 container on
+    TPU), which is what ``comm_bytes_per_step`` measures.
+    """
+
+    name: str
+    bits: int
+    wire_bits: int
+    _compress: Callable = dataclasses.field(repr=False, default=None)
+    _decompress: Callable = dataclasses.field(repr=False, default=None)
+
+    def compress(self, g, xp=jnp):
+        return self._compress(g, xp)
+
+    def decompress(self, q, scale, xp=jnp):
+        return self._decompress(q, scale, xp)
+
+
+CODECS: Dict[str, Codec] = {
+    "none": Codec("none", bits=32, wire_bits=32,
+                  _compress=_none_compress, _decompress=_none_decompress),
+    "int8": Codec("int8", bits=8, wire_bits=8,
+                  _compress=_int8_compress, _decompress=_q_decompress),
+    "sign": Codec("sign", bits=1, wire_bits=8,
+                  _compress=_sign_compress, _decompress=_q_decompress),
+}
+
+
+def get_codec(name) -> Codec:
+    if isinstance(name, Codec):
+        return name
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown codec {name!r} "
+                         f"(one of {sorted(CODECS)})") from None
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback residual state
+# ---------------------------------------------------------------------------
+
+
+def init_state(params, rows: int):
+    """The error-feedback pytree that rides alongside opt_state.
+
+    One float32 residual per (machine/block, parameter): leaves are
+    (rows,) + param.shape, zero-initialised (e_0 = 0, so the first
+    step compresses the raw gradient). ``rows`` is m on the
+    replicated/manual paths and n on the dedup path.
+    """
+    if rows < 1:
+        raise ValueError("rows must be >= 1")
+    return {"residual": jax.tree.map(
+        lambda p: jnp.zeros((rows,) + tuple(p.shape), jnp.float32),
+        params)}
+
+
+def comm_bytes_per_step(codec: Optional[Codec], rows: int, params) -> int:
+    """Bytes the machines ship per step under ``codec``.
+
+    ``None`` is the uncompressed baseline (full float32 gradients, no
+    scale sideband); a codec pays ``wire_bits`` per component plus one
+    float32 scale per (row, leaf). A measured quantity in the sense
+    that it counts the actual payload arrays the combine consumes --
+    not a model of a hypothetical transport.
+    """
+    leaves = jax.tree.leaves(params)
+    total = sum(int(np.prod(leaf.shape)) for leaf in leaves)
+    if codec is None:
+        return rows * total * 4
+    return rows * (total * codec.wire_bits // 8 + len(leaves) * 4)
+
+
+# ---------------------------------------------------------------------------
+# Error-vs-p-vs-bits campaign
+# ---------------------------------------------------------------------------
+
+
+def compression_campaign(assignment: Assignment,
+                         p_grid: Sequence[float], *,
+                         codecs: Sequence[str] = ("none", "sign", "int8"),
+                         trials: int = 200, dim: int = 512,
+                         seed: int = 0, method: str = "optimal",
+                         debias: bool = True,
+                         majority_vote: bool = True) -> List[Dict]:
+    """The error-vs-p-vs-bits grid: decoding error composed with
+    quantization noise, on one shared straggler draw.
+
+    Protocol: one ``bernoulli_uniforms`` draw shared across the whole
+    grid (the sweep engine's common-random-numbers contract), one fixed
+    synthetic gradient tableau G (n, dim) with target ``sum_i G_i``,
+    machine messages ``g = A^T G``, and per codec the *precomputed*
+    float round-trip ``dequant(quant(g))`` -- so every (codec, p) cell
+    differs only in the decode weights and the codec, never the draw.
+
+    Rows: {codec, bits, p, decoding, mean_error, std_error} with
+    relative error ``|W_t qhat - target|^2 / |target|^2`` per trial.
+    ``majority_vote=True`` appends the degenerate fixed-decoding entry
+    per p: majority-vote signSGD (Bernstein et al. Alg. 2 with unit
+    server weights over the alive machines, L1 target scale) -- the
+    scheme the coded sign rows beat by replacing the vote with the
+    paper's optimal decode.
+    """
+    p_list = [float(p) for p in p_grid]
+    u = bernoulli_uniforms(assignment.m, trials, seed)
+    rng = np.random.default_rng(seed + 1)
+    G = rng.normal(size=(assignment.n, dim)) / np.sqrt(dim)
+    target = G.sum(axis=0)
+    tnorm = float((target ** 2).sum())
+    g = (assignment.A.T @ G).astype(np.float32)        # (m, dim)
+
+    deq = {}
+    for cname in codecs:
+        codec = get_codec(cname)
+        q, s = codec.compress(g, xp=np)
+        deq[cname] = np.asarray(codec.decompress(q, s, xp=np), np.float64)
+    mv_scale = float(np.abs(target).sum()) / dim
+    sgn = np.sign(g).astype(np.float64)
+
+    rows: List[Dict] = []
+    for p in p_list:
+        alive = u >= p
+        scale = 1.0
+        if debias and method == "optimal":
+            scale = sw.debias_scale_mc(assignment, p=p, trials=trials,
+                                       seed=seed + 0x5EED)
+        W, _ = sw.batched_step_weights(assignment, alive, method=method,
+                                       p=p, scale=scale)
+        for cname in codecs:
+            est = W @ deq[cname]                       # (trials, dim)
+            errs = ((est - target) ** 2).sum(axis=1) / tnorm
+            rows.append({"codec": cname, "bits": get_codec(cname).bits,
+                         "p": p, "decoding": method,
+                         "mean_error": float(errs.mean()),
+                         "std_error": float(errs.std())})
+        if majority_vote:
+            est = mv_scale * np.sign(alive.astype(np.float64) @ sgn)
+            errs = ((est - target) ** 2).sum(axis=1) / tnorm
+            rows.append({"codec": "sign", "bits": 1, "p": p,
+                         "decoding": "majority_vote",
+                         "mean_error": float(errs.mean()),
+                         "std_error": float(errs.std())})
+    return rows

@@ -19,10 +19,10 @@ data-sharded and GSPMD inserts the psum; ``coded_allreduce`` is the
 same combine as an explicit ``shard_map`` collective for runs that
 want manual control over the reduction.
 
-Two execution models, one algebra
----------------------------------
+Three execution models, one algebra
+-----------------------------------
 
-The module offers the paper's update in two equivalent forms; picking
+The module offers the paper's update in three equivalent forms; picking
 between them is picking what the mesh is *simulating*:
 
 * **Replicated-machine** (``coded_loss_fn``): the batch carries the
@@ -42,10 +42,27 @@ between them is picking what the mesh is *simulating*:
   instead of ~d x. Gradients, optimizer updates and loss trajectories
   match the replicated path to float32 tolerance
   (tests/test_dedup.py); only the wall-clock differs.
+* **Compressed combine** (``make_train_step(compress=...)``): the
+  bandwidth-bound regime, where shipping full-precision g_j costs a
+  d-fold comms tax exactly where dedup already closed the FLOP tax.
+  Each machine's (or, on the dedup path, each unique block's) gradient
+  is quantized by a ``core.compress`` codec (int8 / signSGD sign) with
+  per-worker error feedback, and the decode-weighted combine runs
+  directly on the quantized payload through the fused
+  ``quantized_combine`` kernel -- dequantize, w-weight and reduce in
+  one pass, never materialising float32 per-machine gradients. The
+  step's state grows a residual pytree next to ``opt_state`` (the
+  telescoping error-feedback memory, checkpointed with it); at codec
+  'none' the path pins to the float32 step at the per-machine-grads
+  tolerance of tests/test_dist.py, and under int8/sign to the
+  quantization bound (tests/test_compress.py).
 
 ``coded_allreduce`` / ``make_manual_train_step`` keep the combine as
 an explicit shard_map psum for runs that want manual control over the
-reduction instead of the GSPMD-inserted one.
+reduction instead of the GSPMD-inserted one;
+``quantized_coded_allreduce`` is the same collective carrying the
+quantized payload (each shard dequant-combines its local machines,
+then one float32 psum of the partial combines).
 
 Host side, ``CodingRuntime`` bridges ``repro.core``'s oracle into the
 training loop: it instantiates the assignment (expander / FRC /
@@ -76,6 +93,7 @@ except ImportError:  # newer jax moved it to the top level
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import CodingConfig, ModelConfig
+import repro.core.compress as compress_mod
 import repro.core.step_weights as sw
 from repro.core.assignment import (Assignment, expander_assignment,
                                    frc_assignment, uncoded_assignment)
@@ -145,9 +163,60 @@ def dedup_norm_scale(assignment: Assignment) -> float:
     return assignment.m * assignment.load / assignment.n
 
 
+def compress_combine_tree(grads, residual, w, codec, *,
+                          error_feedback: bool = True):
+    """Quantize per-row gradients and run the fused combine per leaf.
+
+    ``grads`` leaves carry a leading row axis (m machines or n unique
+    blocks); ``residual`` is the matching error-feedback pytree
+    (``core.compress.init_state``); ``w`` the (rows,) decode weights
+    (machine w or block v = A @ w). Per leaf: compress ``g + e``
+    row-wise, combine the quantized payload through
+    ``quantized_combine`` (the float32 per-row gradients are never
+    materialised past this point), and keep ``e' = (g + e) - dequant``.
+    Returns (combined float32 tree, new residual tree).
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residual)
+    outs, new_rs = [], []
+    for g, r in zip(g_leaves, r_leaves):
+        rows = g.shape[0]
+        flat = g.reshape(rows, -1).astype(jnp.float32)
+        pre = flat + r.reshape(rows, -1) if error_feedback else flat
+        q, s = codec.compress(pre)
+        outs.append(cc_ops.quantized_combine(q, s, w)
+                    .reshape(g.shape[1:]))
+        new_rs.append((pre - codec.decompress(q, s)).reshape(g.shape)
+                      if error_feedback else r)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, new_rs))
+
+
+def _per_machine_values_and_grads(params, batch, cfg):
+    """vmapped per-machine (loss_j, g_j) over the replicated (m, load,
+    ...) batch -- the materialised form both the manual collective and
+    the compressed replicated path reduce."""
+    bw = batch["block_weight"]
+    load = bw.shape[1]
+    norm = batch["labels"].size
+
+    def machine_loss(p, mb, bw_j):
+        flat = {k: x.reshape((-1,) + x.shape[2:])
+                for k, x in mb.items()}
+        per_seq = M.train_loss(p, flat, cfg, per_example=True)
+        per_block = per_seq.reshape(load, -1).sum(axis=1)
+        return (bw_j * per_block).sum() / norm
+
+    data = {k: v for k, v in batch.items() if k != "block_weight"}
+    return jax.vmap(
+        lambda mb, bw_j: jax.value_and_grad(machine_loss)(
+            params, mb, bw_j))(data, bw)
+
+
 def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
                     n_microbatches: int = 1, *, dedup: bool = False,
-                    norm_scale: float = 1.0, alpha_weights=None):
+                    norm_scale: float = 1.0, alpha_weights=None,
+                    compress=None, error_feedback: bool = True):
     """(params, opt_state, coded_batch, w) -> (params, opt_state,
     metrics).
 
@@ -171,12 +240,66 @@ def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
     host-side ``A @ w`` every step) is folded into the metrics dict --
     ``mean(v)`` directly on the dedup path, ``(colsum(A)/n) . w`` via
     ``alpha_weights`` on the replicated one (omitted if None).
+
+    ``compress`` (a ``core.compress`` codec name or Codec) switches to
+    the compressed-combine execution model: the step's signature grows
+    the error-feedback state, ``(params, opt_state, comp_state, batch,
+    w) -> (params, opt_state, comp_state, metrics)``. Per-row (machine
+    or unique-block) gradients are materialised by a vmapped backward
+    pass, quantized with error feedback, and reduced through the fused
+    ``quantized_combine`` kernel; metrics gain ``comm_bytes`` (the
+    payload the combine consumed this step, a trace-time constant).
+    Incompatible with ``n_microbatches > 1`` (the residual update is
+    defined per full-batch compression round).
     """
     nm = int(n_microbatches)
     if nm < 1:
         raise ValueError("n_microbatches must be >= 1")
     aw = (None if alpha_weights is None
           else jnp.asarray(alpha_weights, jnp.float32))
+
+    if compress is not None:
+        if nm != 1:
+            raise ValueError("compress does not compose with "
+                             "n_microbatches > 1")
+        codec = compress_mod.get_codec(compress)
+
+        def compressed_step(params, opt_state, comp_state, batch, w):
+            if dedup:
+                labels = batch["labels"]
+                norm = labels.size * norm_scale
+
+                def block_loss(p, blk):
+                    per_seq = M.train_loss(p, blk, cfg,
+                                           per_example=True)
+                    return per_seq.sum() / norm
+
+                losses, grads = jax.vmap(
+                    lambda blk: jax.value_and_grad(block_loss)(
+                        params, blk))(batch)
+            else:
+                losses, grads = _per_machine_values_and_grads(
+                    params, batch, cfg)
+            loss = (w * losses).sum()
+            combined, new_resid = compress_combine_tree(
+                grads, comp_state["residual"], w, codec,
+                error_feedback=error_feedback)
+            rows = w.shape[0]
+            comm = compress_mod.comm_bytes_per_step(
+                codec, int(rows), params)
+            updates, opt_state = optimizer.update(combined, opt_state,
+                                                  params)
+            params = opt_mod.apply_updates(params, updates)
+            metrics = {"loss": loss,
+                       "grad_norm": opt_mod.global_norm(combined),
+                       "comm_bytes": jnp.asarray(comm, jnp.float32)}
+            if dedup:
+                metrics["alpha_bar"] = w.mean()
+            elif aw is not None:
+                metrics["alpha_bar"] = jnp.dot(aw, w)
+            return params, opt_state, {"residual": new_resid}, metrics
+
+        return compressed_step
 
     def loss_fn(p, b, wv):
         if dedup:
@@ -273,6 +396,33 @@ def coded_allreduce(grads, w: jnp.ndarray, mesh):
         grads, w)
 
 
+def quantized_coded_allreduce(q_tree, scale_tree, w: jnp.ndarray, mesh):
+    """``coded_allreduce`` carrying the quantized payload.
+
+    ``q_tree`` leaves are (m, ...) codec payloads (int8 for int8/sign,
+    float32 for 'none') with matching (m,) per-machine scales in
+    ``scale_tree``, both sharded over the worker axes like the float32
+    gradients would be -- so the bytes crossing the machine axis are
+    the codec's wire format, not float32. Each shard runs the fused
+    ``quantized_combine`` over its local machines and a single float32
+    psum of the partial combines produces the replicated global
+    ``sum_j w_j * scale_j * q_j``.
+    """
+    axes = data_axes(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    qspecs = jax.tree.map(lambda _: P(lead), q_tree)
+    sspecs = jax.tree.map(lambda _: P(lead), scale_tree)
+
+    def local_combine(qt, st, w_local):
+        out = cc_ops.quantized_combine_tree(qt, st, w_local)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), out)
+
+    return shard_map(local_combine, mesh=mesh,
+                     in_specs=(qspecs, sspecs, P(lead)),
+                     out_specs=jax.tree.map(lambda _: P(), q_tree))(
+        q_tree, scale_tree, w)
+
+
 def alpha_bar_weights(assignment: Assignment) -> np.ndarray:
     """(m,) vector a with a . w == mean(A @ w): the on-device form of
     the alpha-bar debias divisor (colsum(A)/n), so train steps can
@@ -283,7 +433,9 @@ def alpha_bar_weights(assignment: Assignment) -> np.ndarray:
 
 def make_manual_collective_train_step(cfg: ModelConfig,
                                       optimizer: opt_mod.Optimizer,
-                                      mesh, alpha_weights=None):
+                                      mesh, alpha_weights=None,
+                                      compress=None,
+                                      error_feedback: bool = True):
     """Replicated-path train step whose combine is the explicit
     ``coded_allreduce`` shard_map psum instead of the GSPMD-inserted
     one (the ROADMAP manual-vs-gspmd comparison).
@@ -298,35 +450,69 @@ def make_manual_collective_train_step(cfg: ModelConfig,
     inspectable and the per-machine g_j exist as tensors, as on a real
     cluster), not the fast one; ``benchmarks/train_step.py`` carries a
     ``collective: manual`` row tracking exactly what that costs.
+
+    ``compress`` routes the combine through
+    ``quantized_coded_allreduce`` instead: the per-machine gradients
+    are quantized (with error feedback) *before* the collective, so
+    what crosses the worker axes is the codec's wire payload. As in
+    ``make_train_step``, the compressed step's signature carries the
+    residual state as a third positional argument.
     """
     aw = (None if alpha_weights is None
           else jnp.asarray(alpha_weights, jnp.float32))
 
-    def step(params, opt_state, batch, w):
-        bw = batch["block_weight"]
-        load = bw.shape[1]
-        norm = batch["labels"].size
-
-        def machine_loss(p, mb, bw_j):
-            flat = {k: x.reshape((-1,) + x.shape[2:])
-                    for k, x in mb.items()}
-            per_seq = M.train_loss(p, flat, cfg, per_example=True)
-            per_block = per_seq.reshape(load, -1).sum(axis=1)
-            return (bw_j * per_block).sum() / norm
-
-        data = {k: v for k, v in batch.items() if k != "block_weight"}
-        losses, grads = jax.vmap(
-            lambda mb, bw_j: jax.value_and_grad(machine_loss)(
-                params, mb, bw_j))(data, bw)
-        grads = coded_allreduce(grads, w, mesh)   # (m, ...) -> combine
-        loss = (w * losses).sum()
+    def _finish(params, opt_state, loss, grads, w, extra=None):
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = opt_mod.apply_updates(params, updates)
         metrics = {"loss": loss,
                    "grad_norm": opt_mod.global_norm(grads)}
+        if extra:
+            metrics.update(extra)
         if aw is not None:
             metrics["alpha_bar"] = jnp.dot(aw, w)
         return params, opt_state, metrics
+
+    if compress is not None:
+        codec = compress_mod.get_codec(compress)
+
+        def compressed_step(params, opt_state, comp_state, batch, w):
+            losses, grads = _per_machine_values_and_grads(
+                params, batch, cfg)
+            loss = (w * losses).sum()
+            g_leaves, treedef = jax.tree.flatten(grads)
+            r_leaves = treedef.flatten_up_to(comp_state["residual"])
+            q_leaves, s_leaves, new_rs = [], [], []
+            for g, r in zip(g_leaves, r_leaves):
+                rows = g.shape[0]
+                flat = g.reshape(rows, -1).astype(jnp.float32)
+                pre = (flat + r.reshape(rows, -1) if error_feedback
+                       else flat)
+                q, s = codec.compress(pre)
+                q_leaves.append(q.reshape(g.shape))
+                s_leaves.append(s)
+                new_rs.append(
+                    (pre - codec.decompress(q, s)).reshape(g.shape)
+                    if error_feedback else r)
+            combined = quantized_coded_allreduce(
+                jax.tree.unflatten(treedef, q_leaves),
+                jax.tree.unflatten(treedef, s_leaves), w, mesh)
+            comm = compress_mod.comm_bytes_per_step(
+                codec, int(w.shape[0]), params)
+            params, opt_state, metrics = _finish(
+                params, opt_state, loss, combined, w,
+                extra={"comm_bytes": jnp.asarray(comm, jnp.float32)})
+            new_state = {"residual": jax.tree.unflatten(treedef,
+                                                        new_rs)}
+            return params, opt_state, new_state, metrics
+
+        return compressed_step
+
+    def step(params, opt_state, batch, w):
+        losses, grads = _per_machine_values_and_grads(params, batch,
+                                                      cfg)
+        grads = coded_allreduce(grads, w, mesh)   # (m, ...) -> combine
+        loss = (w * losses).sum()
+        return _finish(params, opt_state, loss, grads, w)
 
     return step
 

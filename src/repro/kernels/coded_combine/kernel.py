@@ -10,6 +10,12 @@ exactly once, and keeps the fp32 accumulator implicit in registers.
 
 Grid: (D // block_d,); the weights vector (n_blocks,) is broadcast to
 every step as a whole VMEM block (it is tiny).
+
+``quantized_combine`` is the compression-composed variant: the same
+streaming reduction over an int8 (or float32) payload with per-row
+dequant scales folded into the combine weights -- dequantize, weight
+and reduce in one pass, reading 1 byte/component off the wire format
+instead of 4.
 """
 
 from __future__ import annotations
@@ -33,6 +39,59 @@ def _pick_block_d(n_blocks: int, d: int) -> int:
     if bd > 128:
         bd -= bd % 128  # lane alignment
     return min(bd, d)
+
+
+def _quantized_combine_kernel(q_ref, u_ref, o_ref):
+    # Static unrolled fold: acc += u[b] * q[b]. Written as the
+    # accumulation chain (not a matvec) so the payload dequant stays a
+    # per-element cast inside the multiply-accumulate -- no float32
+    # (n_blocks, block_d) gradient tile ever exists. The chain is
+    # differential-tested against ref.quantized_combine_np (bitwise on
+    # exactness-preserving inputs, tolerance in general -- see its
+    # docstring on XLA's per-lane FMA contraction).
+    q = q_ref[...]                               # (n_blocks, block_d)
+    u = u_ref[...].astype(jnp.float32)           # (n_blocks,)
+    acc = jnp.zeros((q.shape[1],), jnp.float32)
+    for b in range(q.shape[0]):
+        acc = acc + u[b] * q[b].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def quantized_combine(q: jnp.ndarray, scales: jnp.ndarray,
+                      w: jnp.ndarray, *, block_d: int | None = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Fused dequantize-weight-combine: (n_blocks, D) quantized payload
+    + (n_blocks,) scales + (n_blocks,) decoding weights -> (D,) float32.
+
+    The dequant scale folds into the combine weight on the host side of
+    the launch (u = w * scales, one tiny elementwise op), so the kernel
+    streams the compressed payload once -- 1 byte/component for the
+    int8/sign codecs against the float32 combine's 4 -- and the float32
+    per-machine gradients are never materialised. Padding rows of the
+    parameter axis contribute exact zeros (u * 0). Note the int8 native
+    tile on TPU is (32, 128); smoke-scale n_blocks rides interpret mode
+    (CPU CI) where the constraint does not bind.
+    """
+    n_blocks, d = q.shape
+    u = w.astype(jnp.float32) * scales.astype(jnp.float32)
+    bd = block_d or _pick_block_d(n_blocks, d)
+    pad = (-d) % bd
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+    padded_d = q.shape[1]
+    out = pl.pallas_call(
+        _quantized_combine_kernel,
+        grid=(padded_d // bd,),
+        in_specs=[
+            pl.BlockSpec((n_blocks, bd), lambda i: (0, i)),
+            pl.BlockSpec((n_blocks,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded_d,), jnp.float32),
+        interpret=interpret,
+    )(q, u)
+    return out[:d] if pad else out
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

@@ -37,3 +37,35 @@ def coded_combine_tree(grad_tree, w: jnp.ndarray):
         flat = leaf.reshape(n, -1)
         return coded_combine(flat, w).reshape(leaf.shape[1:])
     return jax.tree.map(one, grad_tree)
+
+
+def quantized_combine(q: jnp.ndarray, scales: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """q: (n_blocks, D) payload; scales, w: (n_blocks,) -> (D,) f32."""
+    if _FORCE == "ref":
+        return ref.quantized_combine(q, scales, w)
+    if _FORCE == "pallas":
+        return kernel.quantized_combine(
+            q, scales, w, interpret=jax.default_backend() != "tpu")
+    if jax.default_backend() == "tpu":
+        return kernel.quantized_combine(q, scales, w)
+    return ref.quantized_combine(q, scales, w)
+
+
+def quantized_combine_tree(q_tree, scale_tree, w: jnp.ndarray):
+    """Fused dequantize-weight-combine over a payload pytree.
+
+    ``q_tree`` leaves are (n_blocks, ...) quantized payloads,
+    ``scale_tree`` the matching (n_blocks,) per-row scales; returns the
+    float32 combined tree with the leading axis reduced away. The
+    combine weights carry the decode's straggler zeros, so dead rows'
+    payloads never contribute (w_b * scale_b == 0 exactly).
+    """
+    q_leaves, treedef = jax.tree.flatten(q_tree)
+    s_leaves = treedef.flatten_up_to(scale_tree)
+    outs = []
+    for q, s in zip(q_leaves, s_leaves):
+        n = q.shape[0]
+        flat = q.reshape(n, -1)
+        outs.append(quantized_combine(flat, s, w).reshape(q.shape[1:]))
+    return jax.tree.unflatten(treedef, outs)

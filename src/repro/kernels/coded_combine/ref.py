@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the coded gradient combine."""
+"""Pure-jnp oracle for the coded gradient combine, and the exact
+float64 NumPy reference the quantized combine pins against."""
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def coded_combine(grads: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -12,3 +14,57 @@ def coded_combine(grads: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     out = jnp.einsum("b,bd->d", w.astype(jnp.float32),
                      grads.astype(jnp.float32))
     return out.astype(grads.dtype)
+
+
+def quantized_combine(q: jnp.ndarray, scales: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """Fused dequantize-weight-combine, jnp fallback path.
+
+    q: (n_blocks, D) quantized payload (int8, or float32 for the
+    'none' codec); scales: (n_blocks,) float32 per-row dequant scales;
+    w: (n_blocks,) decoding weights. out[d] = sum_b (w[b] * scales[b])
+    * q[b, d] in float32 -- the per-machine float32 gradients are never
+    materialised: the dequant scale folds into the combine weight and
+    the payload feeds the accumulation chain directly.
+    """
+    u = w.astype(jnp.float32) * scales.astype(jnp.float32)
+    acc = jnp.zeros((q.shape[1],), jnp.float32)
+    for b in range(q.shape[0]):
+        acc = acc + u[b] * q[b].astype(jnp.float32)
+    return acc
+
+
+def quantized_combine_np(q: np.ndarray, scales: np.ndarray,
+                         w: np.ndarray) -> np.ndarray:
+    """NumPy dequantize oracle for ``quantized_combine``: the EXACT
+    combine, evaluated in float64 and rounded once at the end.
+
+    Every term is exactly representable in double: ``u_b = w_b * s_b``
+    is one rounded float32 multiply (reproduced here bitwise), and a
+    float32-by-float32 product needs 48 <= 53 mantissa bits, so
+    ``u_b * q_bd`` carries no rounding at all in f64. For the row
+    counts here the f64 accumulation is the mathematically exact sum,
+    making this the codec-true reference the kernel is measured
+    against.
+
+    Two regimes of comparison (tests/test_kernels.py):
+
+    * BITWISE on exactness-preserving inputs -- power-of-two ``w`` and
+      ``scales`` with integer payloads keep every float32 partial sum
+      exact (n * 127 * 2^spread << 2^24), so any accumulation order or
+      FMA contraction the backend picks lands on the identical bits.
+      This pin survives compiler changes by construction.
+    * TOLERANCE on general inputs -- the float32 chain's rounding
+      differs from exact by O(n * eps): XLA CPU contracts the chain's
+      multiply-adds into FMAs *per vector lane*, a vectorization-
+      dependent mix (measured: plain, natural-order FMA and
+      first-product FMA coexist within one launch), so no single
+      float32 emulation is bit-stable across shapes. The tolerance
+      ladder entry (ROADMAP differential-testing convention) applies.
+    """
+    u = (np.asarray(w, np.float32)
+         * np.asarray(scales, np.float32)).astype(np.float64)
+    acc = np.zeros(np.asarray(q).shape[1], np.float64)
+    for b in range(q.shape[0]):
+        acc = acc + u[b] * np.asarray(q[b]).astype(np.float64)
+    return acc.astype(np.float32)

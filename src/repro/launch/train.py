@@ -25,7 +25,11 @@ weighted by v = A @ w (~1x uncoded FLOPs); ``--no-dedup`` materialises
 the replicated (m, load, ...) machine batch, the faithful simulation of
 a real straggling cluster; ``--collective manual`` additionally routes
 the combine through the explicit ``coded_allreduce`` shard_map psum
-(replicated path only).
+(replicated path only). ``--compress sign|int8`` composes the coding
+layer with gradient compression: per-worker quantization with error
+feedback, the fused quantized combine, comm-bytes-per-step in the
+on-device metrics, and the residual state checkpointed alongside
+opt_state so resumes stay bit-identical.
 
   python -m repro.launch.train --arch qwen1.5-4b --steps 20 \
       --straggler-p 0.2 --scheme expander --decoding optimal
@@ -42,6 +46,7 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import CodingConfig, get_config
+from repro.core import compress as compress_mod
 from repro.data.pipeline import CodedBatcher, SyntheticLM
 from repro.dist import coded_train, sharding as rules
 from repro.launch.mesh import make_production_mesh, make_test_mesh
@@ -75,6 +80,12 @@ def main(argv=None) -> dict:
                     help="gradient combine: GSPMD-inserted psum vs the "
                          "explicit coded_allreduce shard_map (manual "
                          "implies the replicated path)")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "sign", "int8"),
+                    help="quantize per-worker gradients before the "
+                         "coded combine (error feedback on; the fused "
+                         "quantized_combine kernel consumes the "
+                         "payload directly)")
     ap.add_argument("--lookahead", type=int, default=8,
                     help="straggler rounds pre-sampled and decoded per "
                          "batched decode_batch call")
@@ -88,7 +99,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="save a full {params, opt_state} checkpoint "
-                         "every N steps (0: only at the end); a later "
+                         "(plus the error-feedback residual under "
+                         "--compress) every N steps (0: only at the "
+                         "end); a later "
                          "run with the same flags and --ckpt-dir "
                          "resumes from the latest step bit-identically")
     ap.add_argument("--seed", type=int, default=0)
@@ -100,6 +113,10 @@ def main(argv=None) -> dict:
         # The manual collective reduces the per-machine gradients the
         # replicated batch produces; dedup has no machine axis.
         ap.error("--dedup is only supported with --collective gspmd")
+    if args.compress != "none" and args.microbatches != 1:
+        # The error-feedback residual updates once per compression
+        # round, i.e. per full-batch step.
+        ap.error("--compress does not compose with --microbatches")
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -137,6 +154,19 @@ def main(argv=None) -> dict:
     params = M.init_params(cfg, key)
     optimizer = opt_mod.get_optimizer("adamw", args.lr)
     opt_state = optimizer.init(params)
+    # Compression layer: per-row (machine, or unique block on the
+    # dedup path) error-feedback residuals ride alongside opt_state,
+    # and the comm-bytes accounting compares the codec's wire payload
+    # against the float32 baseline the uncompressed combine ships.
+    compress = None if args.compress == "none" else args.compress
+    comp_rows = n_blocks if dedup else m_workers
+    comp_state = (compress_mod.init_state(params, comp_rows)
+                  if compress else None)
+    codec = compress_mod.get_codec(compress) if compress else None
+    comm_bytes = compress_mod.comm_bytes_per_step(codec, comp_rows,
+                                                  params)
+    comm_bytes_f32 = compress_mod.comm_bytes_per_step(None, comp_rows,
+                                                      params)
     # Resume: checkpoints carry the full {params, opt_state} training
     # state plus their step number. Restoring and fast-forwarding the
     # host-side streams (data batches are a pure function of the step;
@@ -151,25 +181,44 @@ def main(argv=None) -> dict:
                   if s <= args.steps]
         if usable:
             step0 = usable[-1]
-            try:
-                state = ckpt.restore(args.ckpt_dir,
-                                     {"params": params,
-                                      "opt_state": opt_state},
-                                     step=step0)
-                params, opt_state = state["params"], state["opt_state"]
-                start = step0
-                runtime.skip(start)
-                print(f"restored step-{step0} checkpoint from "
-                      f"{args.ckpt_dir}")
-            except (ValueError, KeyError):
-                # Pre-composite (params-only) checkpoint layout --
-                # ValueError from restore's leaf-count check, KeyError
-                # when a composite sidecar meets a params-only npz:
-                # keep the historical behavior -- warm-start the
-                # params and train from step 0.
-                params = ckpt.restore(args.ckpt_dir, params, step=step0)
+            # Ordered templates, newest layout first: compressed runs
+            # save {params, opt_state, compress}; uncompressed the
+            # composite pair; the original PR saved params only. A
+            # mismatched template fails restore's validation and the
+            # next is tried (ckpt.restore_any).
+            templates = []
+            if compress:
+                templates.append(("compressed",
+                                  {"params": params,
+                                   "opt_state": opt_state,
+                                   "compress": comp_state}))
+            templates += [("composite", {"params": params,
+                                         "opt_state": opt_state}),
+                          ("params", params)]
+            label, state = ckpt.restore_any(args.ckpt_dir, templates,
+                                            step=step0)
+            if label == "params":
+                # Pre-composite (params-only) checkpoint layout: keep
+                # the historical behavior -- warm-start the params and
+                # train from step 0.
+                params = state
                 print(f"restored params-only checkpoint from "
                       f"{args.ckpt_dir}; training from step 0")
+            else:
+                params = state["params"]
+                opt_state = state["opt_state"]
+                if label == "compressed":
+                    comp_state = state["compress"]
+                elif compress:
+                    # Composite checkpoint from an uncompressed run:
+                    # resume training state, start compression with a
+                    # fresh (zero) residual.
+                    print("checkpoint has no compression state; "
+                          "resuming with zero error-feedback residual")
+                start = step0
+                runtime.skip(start)
+                print(f"restored step-{step0} {label} checkpoint from "
+                      f"{args.ckpt_dir}")
         elif ckpt.saved_steps(args.ckpt_dir):
             raise SystemExit(
                 f"--ckpt-dir {args.ckpt_dir} only has checkpoints past "
@@ -187,13 +236,14 @@ def main(argv=None) -> dict:
     alpha_w = coded_train.alpha_bar_weights(assignment)
     if args.collective == "manual":
         train_step = coded_train.make_manual_collective_train_step(
-            cfg, optimizer, mesh, alpha_weights=alpha_w)
+            cfg, optimizer, mesh, alpha_weights=alpha_w,
+            compress=compress)
     else:
         train_step = coded_train.make_train_step(
             cfg, optimizer, n_microbatches=args.microbatches,
             dedup=dedup,
             norm_scale=coded_train.dedup_norm_scale(assignment),
-            alpha_weights=alpha_w)
+            alpha_weights=alpha_w, compress=compress)
 
     with mesh, ThreadPoolExecutor(max_workers=1) as pool:
         params = jax.device_put(params, pshard)
@@ -204,11 +254,22 @@ def main(argv=None) -> dict:
         batch_np = host_batch(start)
         bshard = (rules.block_shardings if dedup
                   else rules.batch_shardings)(mesh, batch_np)
-        step_fn = jax.jit(
-            train_step,
-            in_shardings=(pshard, oshard, bshard, repl),
-            out_shardings=(pshard, oshard, None),
-            donate_argnums=(0, 1))
+        if compress:
+            # The residual rows follow the gradient rows: replicated
+            # is fine at smoke scale, and the compressed step's
+            # signature carries the state as a donated third argument.
+            comp_state = jax.device_put(comp_state, repl)
+            step_fn = jax.jit(
+                train_step,
+                in_shardings=(pshard, oshard, repl, bshard, repl),
+                out_shardings=(pshard, oshard, repl, None),
+                donate_argnums=(0, 1, 2))
+        else:
+            step_fn = jax.jit(
+                train_step,
+                in_shardings=(pshard, oshard, bshard, repl),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1))
 
         losses = []
         metrics_hist = []          # device scalars, flushed at logs
@@ -234,10 +295,13 @@ def main(argv=None) -> dict:
         def save_ckpt(step: int):
             # A sync point by design (device_get), only hit at
             # checkpoint boundaries.
-            ckpt.save(args.ckpt_dir,
-                      {"params": jax.device_get(params),
-                       "opt_state": jax.device_get(opt_state)},
-                      step=step)
+            state = {"params": jax.device_get(params),
+                     "opt_state": jax.device_get(opt_state)}
+            if compress:
+                # Error-feedback residual rides along so a resumed
+                # compressed run replays bit-identically.
+                state["compress"] = jax.device_get(comp_state)
+            ckpt.save(args.ckpt_dir, state, step=step)
             print(f"saved step-{step} checkpoint to {args.ckpt_dir}")
 
         for step in range(start, args.steps):
@@ -252,8 +316,12 @@ def main(argv=None) -> dict:
             w, alive = lookahead_w.next()
             wv = runtime.block_weights(w) if dedup else w
             wv = jax.device_put(jnp.asarray(wv, jnp.float32), repl)
-            params, opt_state, metrics = step_fn(params, opt_state,
-                                                 batch, wv)
+            if compress:
+                params, opt_state, comp_state, metrics = step_fn(
+                    params, opt_state, comp_state, batch, wv)
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch, wv)
             metrics_hist.append(metrics)
             if step % log_every == 0 or step == args.steps - 1:
                 # The only host<->device syncs in the loop: one bulk
@@ -286,6 +354,9 @@ def main(argv=None) -> dict:
                       "scheme": args.scheme, "decoding": args.decoding,
                       "path": "dedup" if dedup else "replicated",
                       "collective": args.collective,
+                      "compress": args.compress,
+                      "comm_bytes_per_step": comm_bytes,
+                      "comm_bytes_per_step_float32": comm_bytes_f32,
                       "decode_calls": runtime.decode_calls}))
     return {"losses": losses}
 

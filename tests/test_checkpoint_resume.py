@@ -73,3 +73,38 @@ def test_resume_is_bit_identical(tmp_path):
                          "--lookahead", "3", "--ckpt-dir", ck)
     assert capped["start_step"] == EVERY
     assert capped["losses"] == []
+
+
+def test_compressed_resume_is_bit_identical(tmp_path):
+    """--compress int8 threads the error-feedback residual through the
+    checkpoint: a resumed compressed run replays the loss stream
+    bitwise (dropping the residual would shift every post-resume
+    quantization and diverge)."""
+    flags = ("--dedup", "--lookahead", "3", "--compress", "int8")
+    full = _run_driver("--steps", str(STEPS), *flags)
+
+    ck = str(tmp_path / "ck")
+    first = _run_driver("--steps", str(MID), *flags, "--ckpt-dir", ck,
+                        "--ckpt-every", str(EVERY))
+    assert first["losses"] == full["losses"][:MID]
+
+    resumed = _run_driver("--steps", str(STEPS), *flags, "--ckpt-dir",
+                          ck, "--ckpt-every", str(EVERY))
+    assert resumed["start_step"] == MID
+    assert resumed["losses"] == full["losses"][MID:], (
+        f"compressed resume diverged:\n{resumed['losses']}\nvs\n"
+        f"{full['losses'][MID:]}")
+
+
+def test_compress_resumes_from_uncompressed_checkpoint(tmp_path):
+    """An uncompressed {params, opt_state} checkpoint restores into a
+    --compress run (fresh zero residual) -- the layout-compatibility
+    contract of ckpt.restore_any."""
+    ck = str(tmp_path / "ck")
+    _run_driver("--steps", str(MID), "--dedup", "--lookahead", "3",
+                "--ckpt-dir", ck)
+    resumed = _run_driver("--steps", str(STEPS), "--dedup",
+                          "--lookahead", "3", "--compress", "int8",
+                          "--ckpt-dir", ck)
+    assert resumed["start_step"] == MID
+    assert len(resumed["losses"]) == STEPS - MID

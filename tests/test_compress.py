@@ -1,0 +1,377 @@
+"""Property suite for ``core.compress`` + the compressed train step.
+
+Pins: codec round-trip bounds (int8 error <= scale/2, sign payload in
+{-1, 0, 1}); the np/jnp codec pair is bitwise for int8 (elementwise
+IEEE chain) and tolerance-only for sign's summation-order-sensitive
+mean; the error-feedback telescoping identity
+``sum_t dequant_t == sum_t g_t - e_T``; straggler rows (w_j == 0)
+cannot influence the quantized combine bitwise; and the compressed
+train step under the 'none' codec is differentially pinned against the
+baseline fused-autodiff step at the repo's vmapped-combine tolerance
+(rtol=2e-4 -- test_dist.py precedent).
+
+The randomized properties run twice: over a deterministic seeded
+sample (always, so tier-1 pins them even where hypothesis isn't
+installed) and under hypothesis fuzzing when available (CI guards that
+it is).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import compress as cm
+from repro.core import expander_assignment
+from repro.data.pipeline import CodedBatcher, SyntheticLM
+from repro.dist import coded_train
+from repro.kernels.coded_combine import ops as cc_ops, ref as cc_r
+from repro.launch.mesh import make_test_mesh
+from repro.models import model as M
+from repro.optim import optimizers as opt_mod
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYP = True
+except ImportError:  # pragma: no cover - CI fails loudly via the guard
+    HAS_HYP = False
+
+RNG = np.random.default_rng(0)
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Codec round-trips
+# ---------------------------------------------------------------------------
+
+
+def check_int8_roundtrip(g: np.ndarray) -> None:
+    codec = cm.get_codec("int8")
+    q, s = codec.compress(g, xp=np)
+    assert q.dtype == np.int8 and s.dtype == np.float32
+    deq = codec.decompress(q, s, xp=np)
+    # round-to-nearest onto the symmetric grid: error <= scale/2 per
+    # component (tiny slack for the float division)
+    bound = s[..., None] * (0.5 + 1e-5)
+    assert np.all(np.abs(deq - g.astype(np.float32)) <= bound)
+    # all-zero rows take scale 1 and quantize to exactly 0
+    zrow = ~np.any(g, axis=-1)
+    assert np.all(s[zrow] == 1.0) and not np.any(q[zrow])
+
+
+def check_sign_roundtrip(g: np.ndarray) -> None:
+    codec = cm.get_codec("sign")
+    q, s = codec.compress(g, xp=np)
+    assert q.dtype == np.int8
+    assert np.all(np.isin(q, (-1, 0, 1)))
+    np.testing.assert_allclose(
+        s, np.mean(np.abs(g), axis=-1).astype(np.float32), rtol=1e-6)
+    # the L1 scale makes the round-trip correlate positively with g
+    # wherever g is nonzero (the signSGD descent-direction property)
+    deq = codec.decompress(q, s, xp=np)
+    live = np.any(g, axis=-1)
+    assert np.all((deq * g).sum(axis=-1)[live] > 0)
+
+
+def _random_rows(rng: np.random.Generator) -> np.ndarray:
+    rows = int(rng.integers(1, 6))
+    d = int(rng.integers(1, 600))
+    g = rng.normal(size=(rows, d)) * 10.0 ** rng.integers(-3, 3)
+    if rng.random() < 0.3:
+        g[rng.integers(rows)] = 0.0  # exercise the amax == 0 guard
+    return g.astype(np.float32)
+
+
+def test_roundtrip_bounds_seeded():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        g = _random_rows(rng)
+        check_int8_roundtrip(g)
+        check_sign_roundtrip(g)
+
+
+if HAS_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_roundtrip_bounds_hyp(seed):
+        g = _random_rows(np.random.default_rng(seed))
+        check_int8_roundtrip(g)
+        check_sign_roundtrip(g)
+
+
+def test_none_codec_is_float32_passthrough():
+    g = RNG.normal(size=(3, 40)).astype(np.float32)
+    codec = cm.get_codec("none")
+    q, s = codec.compress(g, xp=np)
+    np.testing.assert_array_equal(q, g)
+    np.testing.assert_array_equal(s, np.ones(3, np.float32))
+    np.testing.assert_array_equal(codec.decompress(q, s, xp=np), g)
+
+
+def test_int8_codec_np_jnp_bitwise():
+    """The int8 chain (amax / round / clip / cast) is elementwise IEEE:
+    the on-device compression must match the host reference bitwise."""
+    for shape in [(4, 257), (1, 8), (6, 1024)]:
+        g = RNG.normal(size=shape).astype(np.float32) * 3.0
+        codec = cm.get_codec("int8")
+        qn, sn = codec.compress(g, xp=np)
+        qj, sj = jax.jit(codec.compress)(jnp.asarray(g))
+        np.testing.assert_array_equal(qn, np.asarray(qj))
+        np.testing.assert_array_equal(sn, np.asarray(sj))
+
+
+def test_sign_codec_np_jnp_payload_bitwise_scale_close():
+    """sign's payload is elementwise (bitwise); its mean-|g| scale is
+    summation-order sensitive, hence tolerance only."""
+    g = RNG.normal(size=(5, 700)).astype(np.float32)
+    codec = cm.get_codec("sign")
+    qn, sn = codec.compress(g, xp=np)
+    qj, sj = jax.jit(codec.compress)(jnp.asarray(g))
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    np.testing.assert_allclose(sn, np.asarray(sj), rtol=1e-6)
+
+
+def test_get_codec_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown codec"):
+        cm.get_codec("fp4")
+    assert cm.get_codec(cm.CODECS["int8"]) is cm.CODECS["int8"]
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["sign", "int8"])
+def test_error_feedback_telescopes(name):
+    """e_{t+1} = (g_t + e_t) - dequant_t telescopes:
+    sum_t dequant_t == sum_t g_t - e_T. The codec's bias is bounded by
+    a single residual, not accumulated -- the property that makes the
+    biased sign codec convergent."""
+    codec = cm.get_codec(name)
+    rng = np.random.default_rng(3)
+    rows, d, T = 4, 300, 12
+    e = np.zeros((rows, d), np.float64)
+    sum_g = np.zeros((rows, d), np.float64)
+    sum_deq = np.zeros((rows, d), np.float64)
+    s = None
+    for _ in range(T):
+        g = rng.normal(size=(rows, d))
+        pre = (g + e).astype(np.float32)
+        q, s = codec.compress(pre, xp=np)
+        deq = np.asarray(codec.decompress(q, s, xp=np), np.float64)
+        e = pre.astype(np.float64) - deq
+        sum_g += g
+        sum_deq += deq
+    np.testing.assert_allclose(sum_deq, sum_g - e, rtol=1e-4, atol=1e-4)
+    # the residual is bounded by one quantization step, never the T
+    # accumulated ones: int8's by half the final row scale
+    if name == "int8":
+        assert np.all(np.abs(e) <= s[:, None] * (0.5 + 1e-5))
+
+
+def test_init_state_shapes():
+    params = {"a": jnp.zeros((3, 5)), "b": {"c": jnp.zeros(7)}}
+    state = cm.init_state(params, rows=4)
+    assert state["residual"]["a"].shape == (4, 3, 5)
+    assert state["residual"]["b"]["c"].shape == (4, 7)
+    assert all(not l.any() for l in jax.tree.leaves(state))
+    with pytest.raises(ValueError, match="rows"):
+        cm.init_state(params, rows=0)
+
+
+def test_comm_bytes_per_step():
+    params = {"a": jnp.zeros((3, 5)), "b": jnp.zeros(9)}  # 24 comps
+    assert cm.comm_bytes_per_step(None, 4, params) == 4 * 24 * 4
+    assert cm.comm_bytes_per_step(cm.get_codec("int8"), 4, params) \
+        == 4 * (24 + 2 * 4)
+    # sign ships the same int8 container + scales as int8
+    assert cm.comm_bytes_per_step(cm.get_codec("sign"), 4, params) \
+        == cm.comm_bytes_per_step(cm.get_codec("int8"), 4, params)
+
+
+# ---------------------------------------------------------------------------
+# Quantized combine: straggler invariance + tree plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_dead_rows_cannot_influence_quantized_combine():
+    """w_j == 0 makes u_j = w_j * s_j exactly 0, and 0 * q is exactly
+    0 for any finite payload: perturbing a straggler's payload must
+    leave the combine BITWISE unchanged -- on the jnp fallback and in
+    the Pallas kernel alike."""
+    from repro.kernels.coded_combine import kernel as cc_k
+
+    q = RNG.integers(-127, 128, size=(5, 400)).astype(np.int8)
+    s = RNG.uniform(0.1, 2.0, size=5).astype(np.float32)
+    w = np.asarray([1.0, 0.0, 0.5, 0.0, 2.0], np.float32)
+    q2 = q.copy()
+    q2[1] = 127
+    q2[3] = -127
+    for fn in (cc_r.quantized_combine,
+               lambda *a: cc_k.quantized_combine(*map(jnp.asarray, a),
+                                                 interpret=True)):
+        a = np.asarray(fn(jnp.asarray(q), jnp.asarray(s),
+                          jnp.asarray(w)))
+        b = np.asarray(fn(jnp.asarray(q2), jnp.asarray(s),
+                          jnp.asarray(w)))
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(
+        cc_r.quantized_combine_np(q, s, w),
+        cc_r.quantized_combine_np(q2, s, w))
+
+
+def test_quantized_combine_tree_matches_dequant_combine():
+    """The fused tree combine == dequantize-then-coded_combine, leaf by
+    leaf (float64 reference, tolerance)."""
+    tree_shapes = {"w1": (4, 6, 3), "b": (4, 10)}
+    q_tree = {k: jnp.asarray(RNG.integers(-127, 128, size=shp), jnp.int8)
+              for k, shp in tree_shapes.items()}
+    s_tree = {k: jnp.asarray(RNG.uniform(0.1, 1.0, size=4), jnp.float32)
+              for k in tree_shapes}
+    w = jnp.asarray([0.7, 0.0, 1.3, 0.4], jnp.float32)
+    out = cc_ops.quantized_combine_tree(q_tree, s_tree, w)
+    for k in tree_shapes:
+        qf = np.asarray(q_tree[k], np.float64)
+        lead = (-1,) + (1,) * (qf.ndim - 1)
+        deq = qf * np.asarray(s_tree[k], np.float64).reshape(lead)
+        expect = (deq * np.asarray(w, np.float64).reshape(lead)) \
+            .sum(axis=0)
+        assert out[k].shape == tree_shapes[k][1:]
+        np.testing.assert_allclose(np.asarray(out[k], np.float64),
+                                   expect, rtol=1e-5, atol=1e-5)
+
+
+def test_compress_combine_tree_none_is_exact_with_zero_residual():
+    """The 'none' codec is a float32 passthrough: residual stays
+    exactly zero and the combine equals coded_combine at tolerance."""
+    grads = {"a": jnp.asarray(RNG.normal(size=(3, 8, 2)), jnp.float32),
+             "b": jnp.asarray(RNG.normal(size=(3, 5)), jnp.float32)}
+    resid = jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    w = jnp.asarray([1.0, 0.0, 0.6], jnp.float32)
+    combined, new_r = coded_train.compress_combine_tree(
+        grads, resid, w, cm.get_codec("none"))
+    for k in grads:
+        assert not np.asarray(new_r[k]).any()
+        np.testing.assert_allclose(
+            np.asarray(combined[k]),
+            np.asarray(cc_ops.coded_combine_tree(grads, w)[k]),
+            rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Compressed train step differentials
+# ---------------------------------------------------------------------------
+
+
+def _setup(m=4, d=2, bs=3, S=16):
+    cfg = get_config("granite-3-8b").smoke_variant()
+    A = expander_assignment(m, d, vertex_transitive=False, seed=1)
+    batcher = CodedBatcher(A, shuffle_seed=0)
+    src = SyntheticLM(cfg.vocab_size, S, seed=0)
+    batch_np = batcher.code_batch(src.batch(A.n * bs, 0))
+    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+    params = M.init_params(cfg, KEY)
+    return cfg, A, batch, params
+
+
+def test_compressed_step_none_codec_matches_baseline():
+    """codec='none' reduces the compressed execution model to the
+    baseline step: same loss and same updated params at the vmapped
+    per-machine-grads + combine tolerance (test_dist.py precedent)."""
+    cfg, A, batch, params = _setup()
+    w = jnp.asarray([1.0, 0.0, 0.7, 2.0], jnp.float32)
+    opt = opt_mod.sgd(1e-2)
+    base = coded_train.make_train_step(cfg, opt)
+    comp = coded_train.make_train_step(cfg, opt, compress="none")
+    state = cm.init_state(params, rows=A.m)
+    p0, _, m0 = base(params, opt.init(params), batch, w)
+    p1, _, s1, m1 = comp(params, opt.init(params), state, batch, w)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                               rtol=1e-5)
+    # the metric is a float32 scalar of an exact host-side integer
+    np.testing.assert_allclose(
+        float(m1["comm_bytes"]),
+        cm.comm_bytes_per_step(cm.get_codec("none"), A.m, params),
+        rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    # float32 passthrough: the error-feedback residual stays zero
+    assert all(not np.asarray(l).any()
+               for l in jax.tree.leaves(s1["residual"]))
+
+
+def test_compressed_step_int8_quantization_is_bounded():
+    """Under int8 the loss path is untouched (quantization sits after
+    the backward pass) and the parameter update differs from the
+    'none'-codec step by at most the lr-scaled quantization noise."""
+    cfg, A, batch, params = _setup()
+    w = jnp.asarray([1.0, 0.0, 0.7, 2.0], jnp.float32)
+    lr = 1e-2
+    opt = opt_mod.sgd(lr)
+    state = cm.init_state(params, rows=A.m)
+    none_step = coded_train.make_train_step(cfg, opt, compress="none")
+    int8_step = coded_train.make_train_step(cfg, opt, compress="int8")
+    p0, _, _, m0 = none_step(params, opt.init(params), state, batch, w)
+    p1, _, s1, m1 = int8_step(params, opt.init(params), state, batch, w)
+    assert float(m0["loss"]) == float(m1["loss"])
+    assert float(m1["comm_bytes"]) < 0.3 * float(m0["comm_bytes"])
+    wsum = float(np.abs(np.asarray(w)).sum())
+    for (a, b, r) in zip(jax.tree.leaves(p0), jax.tree.leaves(p1),
+                         jax.tree.leaves(s1["residual"])):
+        # the EF residual IS the quantization error of this step
+        bound = lr * wsum * (float(np.abs(np.asarray(r)).max()) + 1e-7)
+        assert float(np.abs(np.asarray(a) - np.asarray(b)).max()) \
+            <= bound * 1.01 + 1e-7
+    # a second step consumes the residual: state must actually change
+    assert any(np.asarray(l).any()
+               for l in jax.tree.leaves(s1["residual"]))
+
+
+def test_quantized_allreduce_matches_tree_combine():
+    """The shard_map quantized collective == the local fused tree
+    combine (single-shard mesh: the psum is an identity)."""
+    mesh = make_test_mesh((1, 1))
+    q_tree = {"w": jnp.asarray(RNG.integers(-127, 128, size=(1, 2, 4)),
+                               jnp.int8)}
+    s_tree = {"w": jnp.asarray([1.5], jnp.float32)}
+    w = jnp.asarray([2.0], jnp.float32)
+    out = coded_train.quantized_coded_allreduce(q_tree, s_tree, w, mesh)
+    expect = cc_ops.quantized_combine_tree(q_tree, s_tree, w)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(expect["w"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Campaign grid
+# ---------------------------------------------------------------------------
+
+
+def test_compression_campaign_grid_shape_and_ordering():
+    A = expander_assignment(8, 2, vertex_transitive=True, seed=0)
+    p_grid = (0.1, 0.3)
+    rows = cm.compression_campaign(A, p_grid, trials=64, dim=128,
+                                   seed=0)
+    # 3 codecs + majority vote per p
+    assert len(rows) == len(p_grid) * 4
+    by = {(r["codec"], r["decoding"], r["p"]): r for r in rows}
+    for p in p_grid:
+        none = by[("none", "optimal", p)]
+        int8 = by[("int8", "optimal", p)]
+        sign = by[("sign", "optimal", p)]
+        mv = by[("sign", "majority_vote", p)]
+        assert none["bits"] == 32 and int8["bits"] == 8 \
+            and sign["bits"] == 1 == mv["bits"]
+        for r in (none, int8, sign, mv):
+            assert np.isfinite(r["mean_error"]) and r["mean_error"] >= 0
+        # int8's quantization noise is negligible next to the decoding
+        # floor; sign's is not, and the optimally-decoded sign stays
+        # below the majority vote it replaces
+        assert int8["mean_error"] <= none["mean_error"] * 1.10 + 1e-3
+        assert sign["mean_error"] >= none["mean_error"] - 1e-6
+        assert mv["mean_error"] > none["mean_error"]

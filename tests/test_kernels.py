@@ -103,6 +103,90 @@ def test_coded_combine_kernel_matches_ref(n, D, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+def _exact_qsw(rng, n, D, payload):
+    """Exactness-preserving quantized-combine inputs: integer payload,
+    power-of-two scales and weights (with straggler zeros). Every
+    float32 partial sum is exact (n * 127 * 2^spread << 2^24), so the
+    combine's bits are independent of accumulation order and FMA
+    contraction -- the regime where a bitwise pin is meaningful."""
+    q = rng.integers(-127, 128, size=(n, D)).astype(
+        np.int8 if payload == "int8" else np.float32)
+    s = (2.0 ** rng.integers(-4, 1, size=n)).astype(np.float32)
+    w = (rng.choice([-1.0, 0.0, 1.0], size=n)
+         * 2.0 ** rng.integers(-2, 3, size=n)).astype(np.float32)
+    return q, s, w
+
+
+@pytest.mark.parametrize("n,D", [(1, 256), (2, 130), (4, 1000),
+                                 (7, 61), (16, 4096), (3, 129)])
+@pytest.mark.parametrize("payload", ["int8", "float32"])
+def test_quantized_combine_kernel_bit_identical_to_np(n, D, payload):
+    """The fused dequantize-weight-combine pins BITWISE against the
+    exact NumPy oracle on exactness-preserving inputs -- across
+    payload dtypes, odd widths that force lane padding, and zeroed
+    straggler rows. The jnp fallback must land on the same bits."""
+    rng = np.random.default_rng(n * 1000 + D)
+    q, s, w = _exact_qsw(rng, n, D, payload)
+    ref = cc_r.quantized_combine_np(q, s, w)
+    out = cc_k.quantized_combine(jnp.asarray(q), jnp.asarray(s),
+                                 jnp.asarray(w), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    fallback = jax.jit(cc_r.quantized_combine)(
+        jnp.asarray(q), jnp.asarray(s), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(fallback), ref)
+
+
+@pytest.mark.parametrize("n,D", [(2, 73), (5, 700), (6, 69), (16, 4096)])
+def test_quantized_combine_general_inputs_tolerance(n, D):
+    """General scales/weights: the float32 chain differs from the
+    exact f64 oracle by accumulation rounding only (XLA's per-lane FMA
+    contraction mix -- see ref.quantized_combine_np), bounded by the
+    repo's float32 kernel tolerance."""
+    rng = np.random.default_rng(n * 1000 + D)
+    q = rng.integers(-127, 128, size=(n, D)).astype(np.int8)
+    s = (rng.uniform(0.1, 2.0, size=n)
+         * 10.0 ** rng.integers(-2, 3, size=n)).astype(np.float32)
+    w = rng.normal(size=n).astype(np.float32)
+    ref = np.asarray(cc_r.quantized_combine_np(q, s, w), np.float64)
+    out = cc_k.quantized_combine(jnp.asarray(q), jnp.asarray(s),
+                                 jnp.asarray(w), interpret=True)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(out, np.float64) / scale,
+                               ref / scale, atol=2e-5, rtol=0)
+    eager = cc_r.quantized_combine(jnp.asarray(q), jnp.asarray(s),
+                                   jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(eager, np.float64) / scale,
+                               ref / scale, atol=2e-5, rtol=0)
+
+
+def test_quantized_combine_matches_dequantized_coded_combine():
+    """Semantics, not bit patterns: the fused path equals dequantize-
+    then-coded_combine at float tolerance."""
+    q = RNG.integers(-127, 128, size=(6, 513)).astype(np.int8)
+    s = RNG.uniform(0.1, 2.0, size=6).astype(np.float32)
+    w = RNG.normal(size=6).astype(np.float32)
+    g = jnp.asarray(q, jnp.float32) * jnp.asarray(s)[:, None]
+    out = cc_k.quantized_combine(jnp.asarray(q), jnp.asarray(s),
+                                 jnp.asarray(w), interpret=True)
+    ref = cc_r.coded_combine(g, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quantized_combine_matches_dequantized_coded_combine():
+    """Semantics, not bit patterns: the fused path equals dequantize-
+    then-coded_combine at float tolerance."""
+    q = RNG.integers(-127, 128, size=(6, 513)).astype(np.int8)
+    s = RNG.uniform(0.1, 2.0, size=6).astype(np.float32)
+    w = RNG.normal(size=6).astype(np.float32)
+    g = jnp.asarray(q, jnp.float32) * jnp.asarray(s)[:, None]
+    out = cc_k.quantized_combine(jnp.asarray(q), jnp.asarray(s),
+                                 jnp.asarray(w), interpret=True)
+    ref = cc_r.coded_combine(g, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("T,n,bt", [(4, 128, None), (10, 130, 8),
                                     (64, 1000, 16), (1, 256, None),
                                     (33, 384, 8)])

@@ -63,3 +63,22 @@ def test_train_driver_smoke_manual_collective():
     assert summary["collective"] == "manual"
     assert np.isfinite(summary["last_loss"])
     assert summary["last_loss"] < summary["first_loss"] + 1.0
+
+
+def test_train_driver_smoke_compressed_int8():
+    """The compression-composed execution model end to end: int8
+    quantization + error feedback + the fused quantized combine on the
+    dedup path, with the comm-bytes accounting in the summary. The
+    driver's own decreasing-loss assertion runs inside the subprocess;
+    the 4x wire shrink (int8 payload + scale sideband vs float32
+    gradients) must beat the 0.3x acceptance bar."""
+    summary = _run_driver("--dedup", "--compress", "int8",
+                          "--lookahead", "6", "--log-every", "4")
+    assert summary["steps"] == 12
+    assert summary["path"] == "dedup"
+    assert summary["compress"] == "int8"
+    assert np.isfinite(summary["last_loss"])
+    assert summary["last_loss"] < summary["first_loss"] + 1.0
+    ratio = (summary["comm_bytes_per_step"]
+             / summary["comm_bytes_per_step_float32"])
+    assert ratio <= 0.3, f"int8 comm ratio {ratio:.3f} exceeds 0.3"
