@@ -135,6 +135,23 @@ def _dequantized_combine_oracle(q, s, w):
     return cc_ref.coded_combine(q.astype(jnp.float32) * s[:, None], w)
 
 
+def _mk_packed_sign_combine(nb: int):
+    """Packed 1-bit sign combine bench inputs: (nb, d/8) uint8
+    bit-planes + per-row scales + decode weights with straggler zeros.
+    The derived column reports effective bandwidth over the *packed*
+    bytes streamed -- 1 bit/component vs the float32 combine's 32."""
+    def make(fast: bool):
+        rng = np.random.default_rng(0)
+        D = 1 << 20 if fast else 1 << 22
+        q = jnp.asarray(rng.integers(0, 256, size=(nb, D // 8)),
+                        jnp.uint8)
+        s = jnp.asarray(rng.uniform(0.5, 1.5, size=nb), jnp.float32)
+        w = rng.normal(size=nb).astype(np.float32)
+        w[rng.random(nb) < 0.2] = 0.0  # decoded straggler weights
+        return (q, s, jnp.asarray(w), D), _gbps(q.size)
+    return make
+
+
 def _mk_gram(fast: bool):
     # Tall-skinny Gram matvec oracle at the transposed LPS covariance
     # orientation (x streamed twice per matvec).
@@ -211,6 +228,20 @@ REGISTRY: List[KernelSpec] = [
                jax.jit(cc_ref.quantized_combine),
                oracle=_dequantized_combine_oracle, rtol=2e-5, atol=1e-3,
                reps=10),
+    # Packed 1-bit sign combine at the same replicated/dedup row
+    # counts, checked against the float64 unpack-then-combine oracle
+    # (np.unpackbits decode -- an independent reading of the bit
+    # convention).
+    KernelSpec("packed_sign_combine_ref",
+               _mk_packed_sign_combine(16),
+               jax.jit(cc_ref.packed_sign_combine, static_argnums=3),
+               oracle=cc_ref.packed_sign_combine_np, rtol=2e-5,
+               atol=1e-3, reps=10),
+    KernelSpec("packed_sign_combine_dedup_ref",
+               _mk_packed_sign_combine(32),
+               jax.jit(cc_ref.packed_sign_combine, static_argnums=3),
+               oracle=cc_ref.packed_sign_combine_np, rtol=2e-5,
+               atol=1e-3, reps=10),
     KernelSpec("spectral_matvec_gram_ref", _mk_gram, sm_ref.gram_matvec,
                reps=50),
     KernelSpec("spectral_matvec_gram_batch_ref", _mk_gram_batch,

@@ -93,7 +93,8 @@ def main() -> None:
               f"vs replicated {repl['step_ms']:.1f} ms/step "
               f"({repl['step_ms'] / uncoded['step_ms']:.2f}x) vs "
               f"uncoded {uncoded['step_ms']:.1f} ms/step")
-        # comm-bytes companion table + int8 <= 0.3x acceptance
+        # comm-bytes companion table + per-codec ceilings (int8/sign
+        # <= 0.3x, sign_packed <= 0.05x float32)
         roofline_report.comm_report(report)
 
     if results.get("serve"):

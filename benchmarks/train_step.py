@@ -10,15 +10,23 @@ mesh of virtual CPU devices):
   (sample + cached O(m) optimal decode) and the batched
   ``decode_batch`` path, in microseconds.
 
-Six rows: the replicated coded step (GSPMD combine), the
+Nine rows: the replicated coded step (GSPMD combine), the
 deduplicated coded step (each unique block once, weighted by
 v = A @ w -- the path that closes the replication-factor gap), the
-manual ``coded_allreduce`` collective, the uncoded baseline, and the
-compression-composed dedup steps (int8 / sign through the fused
-quantized combine, with measured comm-bytes-per-step columns). The
-inline acceptance check pins the dedup step strictly under the
-replicated one; the comm-bytes acceptance (int8 <= 0.3x float32)
-lives in ``roofline_report.comm_report``.
+manual ``coded_allreduce`` collective, the uncoded baseline, the
+compression-composed dedup steps (int8 / sign / packed 1-bit sign
+through the fused quantized combine, with measured
+comm-bytes-per-step columns), and the streaming-vs-materialising
+manual pair at m = 8 machines (two per worker shard, so the
+``lax.scan`` streaming accumulator genuinely halves the live
+per-chunk gradients). Every row carries a ``memory`` column: the
+compiled step's XLA ``memory_analysis`` (argument/output/temp/program
+bytes) plus the peak host-visible live-buffer bytes sampled across
+the timed steps. Inline acceptance pins the dedup step strictly under
+the replicated one and the streaming step's temp bytes strictly under
+the materialising manual's; the comm-bytes acceptances (int8 <= 0.3x,
+sign_packed <= 0.05x float32) live in
+``roofline_report.comm_report``.
 
 The measurement loop runs in a subprocess because the virtual-device
 count must land in XLA_FLAGS before jax initialises; ``main`` (the
@@ -40,7 +48,9 @@ N_DEVICES = 8
 def _measure_one(scheme: str, decoding: str, *, steps: int,
                  seq_len: int, block_size: int, path: str = "replicated",
                  collective: str = "gspmd",
-                 compress: str = "none") -> dict:
+                 compress: str = "none",
+                 machines: int = 0,
+                 stream_chunk: int = 0) -> dict:
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -58,7 +68,11 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
              else compress_mod.get_codec(compress))
     cfg = get_config("qwen1.5-4b").smoke_variant()
     mesh = make_test_mesh((N_DEVICES // 2, 2))
-    m_workers = mesh.shape["data"]
+    # ``machines`` > the data-axis size gives each worker shard a
+    # block of several machines -- the regime where the streaming
+    # accumulator holds fewer live gradients than the materialised
+    # manual combine.
+    m_workers = machines or mesh.shape["data"]
     coding = CodingConfig(scheme=scheme, replication=2, decoding=decoding,
                           straggler_p=0.2, seed=0)
     runtime = coded_train.CodingRuntime(coding, m_workers)
@@ -79,7 +93,8 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
                   if codec else None)
     if collective == "manual":
         train_step = coded_train.make_manual_collective_train_step(
-            cfg, optimizer, mesh, compress=compress if codec else None)
+            cfg, optimizer, mesh, compress=compress if codec else None,
+            streaming_chunk=stream_chunk or None)
     else:
         train_step = coded_train.make_train_step(
             cfg, optimizer, dedup=dedup,
@@ -103,6 +118,26 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
             step_fn = jax.jit(train_step,
                               in_shardings=(pshard, None, bshard, repl),
                               out_shardings=(pshard, None, None))
+        # Compiled-program memory accounting: lower the jitted step on
+        # abstract stand-ins (no allocation) and read XLA's
+        # memory_analysis -- the column the streaming-vs-materialising
+        # acceptance compares.
+        sds = lambda t: jax.tree.map(  # noqa: E731
+            lambda x: jax.ShapeDtypeStruct(jnp.asarray(x).shape,
+                                           jnp.asarray(x).dtype), t)
+        wv_sds = jax.ShapeDtypeStruct((m_workers,), jnp.float32)
+        abstract = ((sds(params), sds(opt_state), sds(comp_state),
+                     sds(batch0), wv_sds) if codec else
+                    (sds(params), sds(opt_state), sds(batch0), wv_sds))
+        mem = step_fn.lower(*abstract).compile().memory_analysis()
+        memory = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(
+                mem.generated_code_size_in_bytes),
+        }
+        live_peak = 0
         for step in range(steps):
             batch_np = batch0 if step == 0 else \
                 emit(source.batch(global_batch, step))
@@ -122,6 +157,13 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
                                                      batch, wv)
             jax.block_until_ready(metrics["loss"])
             step_times.append(time.perf_counter() - t0)
+            # Live-buffer sample: every jax.Array alive after the step
+            # (params, opt state, batch, metrics, residuals), peak
+            # across steps -- the host-visible companion to the
+            # compiled temp-bytes column.
+            live_peak = max(live_peak, sum(
+                int(x.nbytes) for x in jax.live_arrays()))
+    memory["live_bytes_peak"] = live_peak
     warm = step_times[2:] or step_times  # first steps pay compile
     step_s = float(np.median(warm))
     # Batched host decode over one lookahead horizon of fresh masks.
@@ -142,6 +184,8 @@ def _measure_one(scheme: str, decoding: str, *, steps: int,
         "path": path,
         "collective": collective,
         "compress": compress,
+        "stream_chunk": stream_chunk,
+        "memory": memory,
         "comm_bytes_per_step": comm,
         "comm_bytes_per_step_float32": comm_f32,
         "m_workers": m_workers,
@@ -169,12 +213,23 @@ def worker(full: bool) -> None:
             _measure_one("expander", "optimal", path="replicated",
                          collective="manual", **kw),
             _measure_one("uncoded", "fixed", path="replicated", **kw),
-            # compression-composed rows: same dedup geometry, int8 and
-            # sign codecs through the fused quantized combine
+            # compression-composed rows: same dedup geometry, int8 /
+            # sign / packed 1-bit sign codecs through the fused
+            # quantized (or packed-sign) combine
             _measure_one("expander", "optimal", path="dedup",
                          compress="int8", **kw),
             _measure_one("expander", "optimal", path="dedup",
                          compress="sign", **kw),
+            _measure_one("expander", "optimal", path="dedup",
+                         compress="sign_packed", **kw),
+            # streaming-vs-materialising manual pair: m = 8 machines on
+            # the 4-shard data axis (two per shard) so the scan-chunked
+            # combine holds half the live gradients
+            _measure_one("expander", "optimal", path="replicated",
+                         collective="manual", machines=8, **kw),
+            _measure_one("expander", "optimal", path="replicated",
+                         collective="manual", machines=8,
+                         stream_chunk=1, **kw),
         ],
     }
     print("BENCH_TRAIN_JSON:" + json.dumps(report))
@@ -206,10 +261,16 @@ def main(fast: bool = True) -> dict:
         label = f"{run['scheme']}/{run['path']}/{run['collective']}"
         if run.get("compress", "none") != "none":
             label += f"/{run['compress']}"
+        if run.get("stream_chunk"):
+            label += f"/stream{run['stream_chunk']}"
+        mem = run.get("memory", {})
+        mb = 1024 ** 2
         print(f"  {label}: {run['step_ms']:.1f} ms/step, "
               f"{run['tokens_per_s']:.0f} tok/s, decode "
               f"{run['decode_us_per_step']:.0f} us/step "
-              f"(batched {run['decode_us_per_mask_batched']:.0f} us/mask)")
+              f"(batched {run['decode_us_per_mask_batched']:.0f} us/mask)"
+              f", temp {mem.get('temp_bytes', 0) / mb:.0f}MB "
+              f"live {mem.get('live_bytes_peak', 0) / mb:.0f}MB")
     runs = report["runs"]
     repl = find_run(runs, scheme="expander", path="replicated",
                     collective="gspmd", compress="none")
@@ -223,6 +284,21 @@ def main(fast: bool = True) -> dict:
          f"coded step ({repl['step_ms']} ms)")
     assert repl["decode_us_per_step"] < 0.2 * repl["step_ms"] * 1e3, \
         "host decode must stay off the step critical path"
+    # Memory acceptance: the scan-chunked streaming combine must hold
+    # strictly fewer compiled temp bytes (the per-machine gradient
+    # working set) than the materialising manual step at the same
+    # m = 8 geometry.
+    manual8 = find_run(runs, collective="manual", m_workers=8,
+                       stream_chunk=0)
+    stream8 = find_run(runs, collective="manual", m_workers=8,
+                       stream_chunk=1)
+    assert stream8["memory"]["temp_bytes"] < \
+        manual8["memory"]["temp_bytes"], \
+        (f"streaming temp bytes ({stream8['memory']['temp_bytes']}) "
+         f"must undercut the materialising manual step "
+         f"({manual8['memory']['temp_bytes']})")
+    print(f"  streaming/materialising temp bytes: "
+          f"{stream8['memory']['temp_bytes'] / manual8['memory']['temp_bytes']:.2f}x")
     print(f"  dedup/uncoded step ratio: "
           f"{dedup['step_ms'] / uncoded['step_ms']:.2f}x "
           f"(replicated was {repl['step_ms'] / uncoded['step_ms']:.2f}x)")

@@ -19,6 +19,15 @@ Codecs (per-tensor symmetric, one scale per machine per leaf):
   information per component; the wire container here is int8 (the
   smallest TPU-native dtype -- bit-packing is a transport-layer detail
   the ``bits``/``wire_bits`` split keeps honest).
+* ``sign_packed`` -- the same sign/mean-|g| semantics with the
+  transport-layer detail actually paid for: 8 signs per uint8 byte
+  (little-endian bit order, bit=1 <-> +1, so ``np.unpackbits(...,
+  bitorder="little")`` is an independent unpacker), taking the wire
+  ratio from sign's 0.25x float32 to ~0.031x. The packed payload's
+  trailing byte is zero-padded, so ``decompress`` needs the true
+  component count ``d``; it differs from ``sign`` only at exact zeros
+  (packed maps 0 -> +1 where sign ships 0), which error feedback
+  absorbs like any other quantization residual.
 
 Every codec is written once over a generic array namespace ``xp`` and
 exposed for both jnp (on-device, inside the jitted train step) and
@@ -98,17 +107,66 @@ def _q_decompress(q, scale, xp):
     return q.astype(xp.float32) * scale[..., None]
 
 
+def packed_width(d: int) -> int:
+    """Bytes needed to carry ``d`` sign bits (8 per byte, ceil)."""
+    return (int(d) + 7) // 8
+
+
+def pack_signs(bits, xp):
+    """(..., D) {0,1} -> (..., ceil(D/8)) uint8, little-endian bits.
+
+    Bit k of byte j carries component 8j + k; the trailing byte is
+    zero-padded. Pure integer shift/mask arithmetic, so np and jnp
+    agree bitwise (and ``np.unpackbits(..., bitorder="little")`` is an
+    independent decoder the tests cross-check against).
+    """
+    d = bits.shape[-1]
+    pad = (-d) % 8
+    bits = bits.astype(xp.uint8)
+    if pad:
+        bits = xp.concatenate(
+            [bits, xp.zeros(bits.shape[:-1] + (pad,), xp.uint8)], axis=-1)
+    grouped = bits.reshape(bits.shape[:-1] + (packed_width(d), 8))
+    weights = (xp.uint8(1) << xp.arange(8, dtype=xp.uint8))
+    return (grouped * weights).sum(axis=-1).astype(xp.uint8)
+
+
+def unpack_signs(q, xp, d: Optional[int] = None):
+    """(..., B) uint8 -> (..., d) {0,1} uint8 (inverse of pack_signs)."""
+    shifts = xp.arange(8, dtype=xp.uint8)
+    bits = (q[..., :, None] >> shifts) & xp.uint8(1)
+    bits = bits.reshape(q.shape[:-1] + (q.shape[-1] * 8,))
+    return bits if d is None else bits[..., :d]
+
+
+def _sign_packed_compress(g, xp):
+    g = g.astype(xp.float32)
+    scale = xp.mean(xp.abs(g), axis=-1).astype(xp.float32)
+    q = pack_signs(g >= 0, xp)
+    return q, scale
+
+
+def _sign_packed_decompress(q, scale, xp, d=None):
+    bits = unpack_signs(q, xp, d)
+    signs = 2.0 * bits.astype(xp.float32) - 1.0
+    return signs * scale[..., None]
+
+
 @dataclasses.dataclass(frozen=True)
 class Codec:
     """One compression scheme: rows-of-components -> (payload, scale).
 
-    ``compress(g)`` takes (..., D) float and returns a (..., D) payload
-    (int8 for the quantized codecs, float32 for 'none') plus a (...,)
-    float32 per-row scale; ``decompress`` is the exact float32
-    round-trip ``payload * scale``. ``bits`` is the information content
-    per component (the campaign's bits axis: 32 / 8 / 1); ``wire_bits``
-    is the container actually shipped (sign rides an int8 container on
-    TPU), which is what ``comm_bytes_per_step`` measures.
+    ``compress(g)`` takes (..., D) float and returns a payload ((..., D)
+    int8 for the quantized codecs, float32 for 'none', (..., ceil(D/8))
+    uint8 for the packed codec) plus a (...,) float32 per-row scale;
+    ``decompress`` is the exact float32 round-trip ``payload * scale``.
+    ``bits`` is the information content per component (the campaign's
+    bits axis: 32 / 8 / 1); ``wire_bits`` is the container actually
+    shipped (sign rides an int8 container on TPU; sign_packed pays the
+    true 1 bit), which is what ``comm_bytes_per_step`` measures.
+    ``packed`` codecs carry fewer payload elements than components, so
+    their ``decompress`` takes the true component count ``d`` (the
+    trailing byte is zero-padded).
     """
 
     name: str
@@ -116,11 +174,14 @@ class Codec:
     wire_bits: int
     _compress: Callable = dataclasses.field(repr=False, default=None)
     _decompress: Callable = dataclasses.field(repr=False, default=None)
+    packed: bool = False
 
     def compress(self, g, xp=jnp):
         return self._compress(g, xp)
 
-    def decompress(self, q, scale, xp=jnp):
+    def decompress(self, q, scale, xp=jnp, d=None):
+        if self.packed:
+            return self._decompress(q, scale, xp, d)
         return self._decompress(q, scale, xp)
 
 
@@ -131,6 +192,9 @@ CODECS: Dict[str, Codec] = {
                   _compress=_int8_compress, _decompress=_q_decompress),
     "sign": Codec("sign", bits=1, wire_bits=8,
                   _compress=_sign_compress, _decompress=_q_decompress),
+    "sign_packed": Codec("sign_packed", bits=1, wire_bits=1,
+                         _compress=_sign_packed_compress,
+                         _decompress=_sign_packed_decompress, packed=True),
 }
 
 
@@ -169,15 +233,19 @@ def comm_bytes_per_step(codec: Optional[Codec], rows: int, params) -> int:
 
     ``None`` is the uncompressed baseline (full float32 gradients, no
     scale sideband); a codec pays ``wire_bits`` per component plus one
-    float32 scale per (row, leaf). A measured quantity in the sense
-    that it counts the actual payload arrays the combine consumes --
-    not a model of a hypothetical transport.
+    float32 scale per (row, leaf), rounded up to whole bytes *per leaf*
+    (each leaf is flattened and packed independently, so a sub-byte
+    codec pads its trailing byte per leaf). A measured quantity in the
+    sense that it counts the actual payload arrays the combine
+    consumes -- not a model of a hypothetical transport.
     """
     leaves = jax.tree.leaves(params)
-    total = sum(int(np.prod(leaf.shape)) for leaf in leaves)
     if codec is None:
+        total = sum(int(np.prod(leaf.shape)) for leaf in leaves)
         return rows * total * 4
-    return rows * (total * codec.wire_bits // 8 + len(leaves) * 4)
+    payload = sum(-(-int(np.prod(leaf.shape)) * codec.wire_bits // 8)
+                  for leaf in leaves)
+    return rows * (payload + len(leaves) * 4)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +290,8 @@ def compression_campaign(assignment: Assignment,
     for cname in codecs:
         codec = get_codec(cname)
         q, s = codec.compress(g, xp=np)
-        deq[cname] = np.asarray(codec.decompress(q, s, xp=np), np.float64)
+        deq[cname] = np.asarray(
+            codec.decompress(q, s, xp=np, d=g.shape[-1]), np.float64)
     mv_scale = float(np.abs(target).sum()) / dim
     sgn = np.sign(g).astype(np.float64)
 

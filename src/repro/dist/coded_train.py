@@ -19,10 +19,10 @@ data-sharded and GSPMD inserts the psum; ``coded_allreduce`` is the
 same combine as an explicit ``shard_map`` collective for runs that
 want manual control over the reduction.
 
-Three execution models, one algebra
------------------------------------
+Four execution models, one algebra
+----------------------------------
 
-The module offers the paper's update in three equivalent forms; picking
+The module offers the paper's update in four equivalent forms; picking
 between them is picking what the mesh is *simulating*:
 
 * **Replicated-machine** (``coded_loss_fn``): the batch carries the
@@ -54,15 +54,34 @@ between them is picking what the mesh is *simulating*:
   step's state grows a residual pytree next to ``opt_state`` (the
   telescoping error-feedback memory, checkpointed with it); at codec
   'none' the path pins to the float32 step at the per-machine-grads
-  tolerance of tests/test_dist.py, and under int8/sign to the
-  quantization bound (tests/test_compress.py).
+  tolerance of tests/test_dist.py, and under int8/sign/sign_packed to
+  the quantization bound (tests/test_compress.py).
+* **Streaming combine**
+  (``make_manual_collective_train_step(streaming_chunk=...)``): the
+  memory-bound regime. The combine ``sum_j w_j g_j`` is linear in the
+  per-machine gradients, so it never needs them all live at once --
+  the same identity Charles et al. use to analyse the decoded
+  gradient lets the reduction stream machine-by-machine. A
+  ``lax.scan`` walks the machine axis in chunks (one chunk per worker
+  shard per step, so data parallelism is preserved), computes that
+  chunk's gradients, runs the per-chunk coded (or quantized/packed)
+  allreduce, and folds the result into a single float32 accumulator
+  pytree: peak live-gradient memory drops from the materialising
+  path's m-rows-at-once to O(chunk). The scan reassociates the sum,
+  so this path pins to the materialising manual step at float32
+  tolerance (tests/test_streaming.py), and
+  ``benchmarks/train_step.py`` records both paths' compiled peak
+  bytes to show the drop is real.
 
-``coded_allreduce`` / ``make_manual_train_step`` keep the combine as
-an explicit shard_map psum for runs that want manual control over the
-reduction instead of the GSPMD-inserted one;
+``coded_allreduce`` / ``make_manual_collective_train_step`` keep the
+combine as an explicit shard_map psum for runs that want manual
+control over the reduction instead of the GSPMD-inserted one;
 ``quantized_coded_allreduce`` is the same collective carrying the
 quantized payload (each shard dequant-combines its local machines,
-then one float32 psum of the partial combines).
+then one float32 psum of the partial combines), and
+``packed_sign_coded_allreduce`` the variant whose wire payload is the
+``sign_packed`` codec's 1-bit planes. All three share one shard_map
+skeleton (``_coded_psum_allreduce``).
 
 Host side, ``CodingRuntime`` bridges ``repro.core``'s oracle into the
 training loop: it instantiates the assignment (expander / FRC /
@@ -172,9 +191,11 @@ def compress_combine_tree(grads, residual, w, codec, *,
     (``core.compress.init_state``); ``w`` the (rows,) decode weights
     (machine w or block v = A @ w). Per leaf: compress ``g + e``
     row-wise, combine the quantized payload through
-    ``quantized_combine`` (the float32 per-row gradients are never
-    materialised past this point), and keep ``e' = (g + e) - dequant``.
-    Returns (combined float32 tree, new residual tree).
+    ``quantized_combine`` -- or ``packed_sign_combine`` for a packed
+    codec, which unpacks the 1-bit planes inside the kernel -- (the
+    float32 per-row gradients are never materialised past this
+    point), and keep ``e' = (g + e) - dequant``. Returns (combined
+    float32 tree, new residual tree).
     """
     g_leaves, treedef = jax.tree.flatten(grads)
     r_leaves = treedef.flatten_up_to(residual)
@@ -182,23 +203,32 @@ def compress_combine_tree(grads, residual, w, codec, *,
     for g, r in zip(g_leaves, r_leaves):
         rows = g.shape[0]
         flat = g.reshape(rows, -1).astype(jnp.float32)
+        d = flat.shape[1]
         pre = flat + r.reshape(rows, -1) if error_feedback else flat
         q, s = codec.compress(pre)
-        outs.append(cc_ops.quantized_combine(q, s, w)
-                    .reshape(g.shape[1:]))
-        new_rs.append((pre - codec.decompress(q, s)).reshape(g.shape)
-                      if error_feedback else r)
+        if codec.packed:
+            outs.append(cc_ops.packed_sign_combine(q, s, w, d)
+                        .reshape(g.shape[1:]))
+        else:
+            outs.append(cc_ops.quantized_combine(q, s, w)
+                        .reshape(g.shape[1:]))
+        new_rs.append(
+            (pre - codec.decompress(q, s, d=d)).reshape(g.shape)
+            if error_feedback else r)
     return (jax.tree.unflatten(treedef, outs),
             jax.tree.unflatten(treedef, new_rs))
 
 
-def _per_machine_values_and_grads(params, batch, cfg):
+def _per_machine_values_and_grads(params, batch, cfg, norm=None):
     """vmapped per-machine (loss_j, g_j) over the replicated (m, load,
     ...) batch -- the materialised form both the manual collective and
-    the compressed replicated path reduce."""
+    the compressed replicated path reduce. ``norm`` overrides the loss
+    normaliser (the streaming path passes the *full* batch's label
+    count while feeding machine chunks)."""
     bw = batch["block_weight"]
     load = bw.shape[1]
-    norm = batch["labels"].size
+    if norm is None:
+        norm = batch["labels"].size
 
     def machine_loss(p, mb, bw_j):
         flat = {k: x.reshape((-1,) + x.shape[2:])
@@ -372,6 +402,32 @@ def make_serve_step(cfg: ModelConfig, window: Optional[int] = None):
     return step
 
 
+def _coded_psum_allreduce(mesh, local_combine_fn, trees, w: jnp.ndarray):
+    """The one shard_map skeleton the coded-allreduce family shares.
+
+    Every payload tree in ``trees`` (and ``w``) carries a leading
+    (global) machine axis sharded over the (pod, data) worker axes;
+    ``local_combine_fn(*local_trees, w_local)`` reduces each shard's
+    local machines to one partial combine, and a psum over the worker
+    axes produces the replicated global result. The variants differ
+    only in what crosses the machine axis (float32 gradients, int8
+    payloads, packed sign bit-planes) and which fused kernel reduces
+    it locally.
+    """
+    axes = data_axes(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    in_specs = tuple(jax.tree.map(lambda _: P(lead), t) for t in trees)
+
+    def body(*args):
+        *local, w_local = args
+        out = local_combine_fn(*local, w_local)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), out)
+
+    return shard_map(body, mesh=mesh, in_specs=(*in_specs, P(lead)),
+                     out_specs=jax.tree.map(lambda _: P(), trees[0]))(
+        *trees, w)
+
+
 def coded_allreduce(grads, w: jnp.ndarray, mesh):
     """The paper combine as an explicit shard_map collective.
 
@@ -382,18 +438,8 @@ def coded_allreduce(grads, w: jnp.ndarray, mesh):
     over the worker axes produces the replicated global
     ``sum_j w_j g_j``.
     """
-    axes = data_axes(mesh)
-    lead = axes if len(axes) > 1 else axes[0]
-    gspecs = jax.tree.map(lambda _: P(lead), grads)
-
-    def local_combine(g, w_local):
-        out = cc_ops.coded_combine_tree(g, w_local)
-        return jax.tree.map(lambda x: jax.lax.psum(x, axes), out)
-
-    return shard_map(local_combine, mesh=mesh,
-                     in_specs=(gspecs, P(lead)),
-                     out_specs=jax.tree.map(lambda _: P(), grads))(
-        grads, w)
+    return _coded_psum_allreduce(mesh, cc_ops.coded_combine_tree,
+                                 (grads,), w)
 
 
 def quantized_coded_allreduce(q_tree, scale_tree, w: jnp.ndarray, mesh):
@@ -408,19 +454,27 @@ def quantized_coded_allreduce(q_tree, scale_tree, w: jnp.ndarray, mesh):
     psum of the partial combines produces the replicated global
     ``sum_j w_j * scale_j * q_j``.
     """
-    axes = data_axes(mesh)
-    lead = axes if len(axes) > 1 else axes[0]
-    qspecs = jax.tree.map(lambda _: P(lead), q_tree)
-    sspecs = jax.tree.map(lambda _: P(lead), scale_tree)
+    return _coded_psum_allreduce(mesh, cc_ops.quantized_combine_tree,
+                                 (q_tree, scale_tree), w)
 
+
+def packed_sign_coded_allreduce(q_tree, scale_tree, w: jnp.ndarray,
+                                mesh, shapes):
+    """``coded_allreduce`` carrying the 1-bit packed sign payload.
+
+    ``q_tree`` leaves are (m, ceil(size/8)) uint8 bit-planes (the
+    ``sign_packed`` codec's wire format -- 1/32 of the float32 bytes
+    crossing the machine axis); ``shapes`` is the matching pytree of
+    combined-output shapes, which the packed payload cannot carry
+    itself. Each shard runs the fused ``packed_sign_combine`` (unpack,
+    +-1, weight, reduce in one pass) over its local machines, then the
+    shared float32 psum.
+    """
     def local_combine(qt, st, w_local):
-        out = cc_ops.quantized_combine_tree(qt, st, w_local)
-        return jax.tree.map(lambda x: jax.lax.psum(x, axes), out)
+        return cc_ops.packed_sign_combine_tree(qt, st, w_local, shapes)
 
-    return shard_map(local_combine, mesh=mesh,
-                     in_specs=(qspecs, sspecs, P(lead)),
-                     out_specs=jax.tree.map(lambda _: P(), q_tree))(
-        q_tree, scale_tree, w)
+    return _coded_psum_allreduce(mesh, local_combine,
+                                 (q_tree, scale_tree), w)
 
 
 def alpha_bar_weights(assignment: Assignment) -> np.ndarray:
@@ -431,11 +485,87 @@ def alpha_bar_weights(assignment: Assignment) -> np.ndarray:
     return (assignment.A.sum(axis=0) / assignment.n).astype(np.float32)
 
 
+def _quantize_rows(grads, residual, codec, error_feedback: bool):
+    """Row-wise quantize of g (+ residual) per leaf, flat payloads.
+
+    Returns (q_tree, scale_tree, new_residual_tree, shapes_tree):
+    payload leaves stay flat (rows, D) -- or (rows, ceil(D/8)) for a
+    packed codec -- and ``shapes_tree`` carries each leaf's
+    combined-output shape (the original shape minus the row axis) for
+    the post-combine reshape the flat payload can't express itself.
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residual)
+    q_l, s_l, r_l, shp_l = [], [], [], []
+    for g, r in zip(g_leaves, r_leaves):
+        rows = g.shape[0]
+        flat = g.reshape(rows, -1).astype(jnp.float32)
+        pre = flat + r.reshape(rows, -1) if error_feedback else flat
+        q, s = codec.compress(pre)
+        q_l.append(q)
+        s_l.append(s)
+        r_l.append(
+            (pre - codec.decompress(q, s, d=flat.shape[1]))
+            .reshape(g.shape) if error_feedback else r)
+        shp_l.append(tuple(g.shape[1:]))
+    unflatten = treedef.unflatten
+    return (unflatten(q_l), unflatten(s_l), unflatten(r_l),
+            unflatten(shp_l))
+
+
+def _compressed_allreduce(q_tree, scale_tree, w, codec, shapes, mesh):
+    """Codec-dispatching wire collective over flat row payloads."""
+    if codec.packed:
+        return packed_sign_coded_allreduce(q_tree, scale_tree, w, mesh,
+                                           shapes)
+    out = quantized_coded_allreduce(q_tree, scale_tree, w, mesh)
+    treedef = jax.tree.structure(out)
+    return treedef.unflatten(
+        [x.reshape(s) for x, s in zip(jax.tree.leaves(out),
+                                      treedef.flatten_up_to(shapes))])
+
+
+def _n_worker_shards(mesh) -> int:
+    m = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        m *= mesh.shape["pod"]
+    return m
+
+
+def _to_stream_chunks(leaf, n_shards: int, chunk: int):
+    """(m, ...) -> (T, n_shards * chunk, ...) machine regrouping.
+
+    The machine axis is block-sharded over the worker shards (shard s
+    owns machines [s*m/W, (s+1)*m/W)), so a scan over contiguous
+    machine chunks would serialise the shards. This regrouping makes
+    scan step t carry ``chunk`` consecutive machines *from every
+    shard* -- full data parallelism per step, O(chunk) live gradients
+    per device -- and the slice's leading axis stays block-contiguous
+    per shard, so the per-chunk allreduce's P(lead) specs still hold.
+    """
+    m = leaf.shape[0]
+    per = m // n_shards
+    x = leaf.reshape((n_shards, per // chunk, chunk) + leaf.shape[1:])
+    x = jnp.moveaxis(x, 1, 0)
+    return x.reshape((per // chunk, n_shards * chunk) + leaf.shape[1:])
+
+
+def _from_stream_chunks(leaf, n_shards: int, chunk: int):
+    """(T, n_shards * chunk, ...) -> (m, ...): exact inverse of
+    ``_to_stream_chunks`` (the residual pytree's way home)."""
+    t = leaf.shape[0]
+    x = leaf.reshape((t, n_shards, chunk) + leaf.shape[2:])
+    x = jnp.moveaxis(x, 0, 1)
+    return x.reshape((n_shards * t * chunk,) + leaf.shape[2:])
+
+
 def make_manual_collective_train_step(cfg: ModelConfig,
                                       optimizer: opt_mod.Optimizer,
                                       mesh, alpha_weights=None,
                                       compress=None,
-                                      error_feedback: bool = True):
+                                      error_feedback: bool = True,
+                                      streaming_chunk: Optional[int]
+                                      = None):
     """Replicated-path train step whose combine is the explicit
     ``coded_allreduce`` shard_map psum instead of the GSPMD-inserted
     one (the ROADMAP manual-vs-gspmd comparison).
@@ -452,14 +582,33 @@ def make_manual_collective_train_step(cfg: ModelConfig,
     ``collective: manual`` row tracking exactly what that costs.
 
     ``compress`` routes the combine through
-    ``quantized_coded_allreduce`` instead: the per-machine gradients
-    are quantized (with error feedback) *before* the collective, so
-    what crosses the worker axes is the codec's wire payload. As in
-    ``make_train_step``, the compressed step's signature carries the
-    residual state as a third positional argument.
+    ``quantized_coded_allreduce`` (or, for the packed 1-bit codec,
+    ``packed_sign_coded_allreduce``) instead: the per-machine
+    gradients are quantized (with error feedback) *before* the
+    collective, so what crosses the worker axes is the codec's wire
+    payload. As in ``make_train_step``, the compressed step's
+    signature carries the residual state as a third positional
+    argument.
+
+    ``streaming_chunk`` bounds how many of the m per-machine gradients
+    are ever live at once: a ``lax.scan`` walks the machine axis in
+    groups of ``chunk`` machines per worker shard (``_to_stream_chunks``
+    regroups the block-sharded machine axis so every scan step keeps
+    all shards busy), runs the per-chunk collective, and accumulates
+    into one float32 pytree -- the combine is linear in the g_j, so
+    streaming only reassociates the sum (pinned to the materialising
+    step at float32 tolerance in tests/test_streaming.py). Composes
+    with ``compress``: quantization, error feedback and the wire
+    collective all happen per chunk, and the residual chunks are
+    scanned out and restored to machine order. Requires m divisible by
+    (worker shards) * chunk.
     """
     aw = (None if alpha_weights is None
           else jnp.asarray(alpha_weights, jnp.float32))
+    codec = (None if compress is None
+             else compress_mod.get_codec(compress))
+    if streaming_chunk is not None and int(streaming_chunk) < 1:
+        raise ValueError("streaming_chunk must be >= 1")
 
     def _finish(params, opt_state, loss, grads, w, extra=None):
         updates, opt_state = optimizer.update(grads, opt_state, params)
@@ -472,38 +621,96 @@ def make_manual_collective_train_step(cfg: ModelConfig,
             metrics["alpha_bar"] = jnp.dot(aw, w)
         return params, opt_state, metrics
 
-    if compress is not None:
-        codec = compress_mod.get_codec(compress)
+    if streaming_chunk is not None:
+        chunk = int(streaming_chunk)
+        n_shards = _n_worker_shards(mesh)
 
+        def _check_divisible(m):
+            if m % (n_shards * chunk):
+                raise ValueError(
+                    f"streaming needs m divisible by worker shards x "
+                    f"chunk = {n_shards} x {chunk}, got m={m}")
+
+        def _scan_combine(params, batch, w, residual):
+            """Shared streaming core: scan machine chunks, accumulate
+            the (possibly quantized) combine and the w-weighted loss;
+            returns (grads, loss, new_residual-or-None)."""
+            m = w.shape[0]
+            _check_divisible(m)
+            norm = batch["labels"].size
+            b_xs = {k: _to_stream_chunks(v, n_shards, chunk)
+                    for k, v in batch.items()}
+            w_xs = _to_stream_chunks(w, n_shards, chunk)
+            xs = (b_xs, w_xs)
+            if residual is not None:
+                xs += (jax.tree.map(
+                    lambda r: _to_stream_chunks(r, n_shards, chunk),
+                    residual),)
+
+            def body(carry, xs_t):
+                g_acc, l_acc = carry
+                cb, w_c = xs_t[0], xs_t[1]
+                losses, grads = _per_machine_values_and_grads(
+                    params, cb, cfg, norm=norm)
+                if codec is None:
+                    contrib = coded_allreduce(grads, w_c, mesh)
+                    new_r = None
+                else:
+                    q_t, s_t, new_r, shapes = _quantize_rows(
+                        grads, xs_t[2], codec, error_feedback)
+                    contrib = _compressed_allreduce(
+                        q_t, s_t, w_c, codec, shapes, mesh)
+                g_acc = jax.tree.map(jnp.add, g_acc, contrib)
+                l_acc = l_acc + (w_c * losses).sum()
+                return (g_acc, l_acc), new_r
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), r_ys = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), xs)
+            if residual is not None:
+                r_ys = jax.tree.map(
+                    lambda r: _from_stream_chunks(r, n_shards, chunk),
+                    r_ys)
+            return grads, loss, r_ys
+
+        if codec is not None:
+            def streaming_compressed_step(params, opt_state, comp_state,
+                                          batch, w):
+                grads, loss, new_resid = _scan_combine(
+                    params, batch, w, comp_state["residual"])
+                comm = compress_mod.comm_bytes_per_step(
+                    codec, int(w.shape[0]), params)
+                params, opt_state, metrics = _finish(
+                    params, opt_state, loss, grads, w,
+                    extra={"comm_bytes": jnp.asarray(comm,
+                                                     jnp.float32)})
+                return params, opt_state, {"residual": new_resid}, \
+                    metrics
+
+            return streaming_compressed_step
+
+        def streaming_step(params, opt_state, batch, w):
+            grads, loss, _ = _scan_combine(params, batch, w, None)
+            return _finish(params, opt_state, loss, grads, w)
+
+        return streaming_step
+
+    if codec is not None:
         def compressed_step(params, opt_state, comp_state, batch, w):
             losses, grads = _per_machine_values_and_grads(
                 params, batch, cfg)
             loss = (w * losses).sum()
-            g_leaves, treedef = jax.tree.flatten(grads)
-            r_leaves = treedef.flatten_up_to(comp_state["residual"])
-            q_leaves, s_leaves, new_rs = [], [], []
-            for g, r in zip(g_leaves, r_leaves):
-                rows = g.shape[0]
-                flat = g.reshape(rows, -1).astype(jnp.float32)
-                pre = (flat + r.reshape(rows, -1) if error_feedback
-                       else flat)
-                q, s = codec.compress(pre)
-                q_leaves.append(q.reshape(g.shape))
-                s_leaves.append(s)
-                new_rs.append(
-                    (pre - codec.decompress(q, s)).reshape(g.shape)
-                    if error_feedback else r)
-            combined = quantized_coded_allreduce(
-                jax.tree.unflatten(treedef, q_leaves),
-                jax.tree.unflatten(treedef, s_leaves), w, mesh)
+            q_tree, s_tree, new_resid, shapes = _quantize_rows(
+                grads, comp_state["residual"], codec, error_feedback)
+            combined = _compressed_allreduce(q_tree, s_tree, w, codec,
+                                             shapes, mesh)
             comm = compress_mod.comm_bytes_per_step(
                 codec, int(w.shape[0]), params)
             params, opt_state, metrics = _finish(
                 params, opt_state, loss, combined, w,
                 extra={"comm_bytes": jnp.asarray(comm, jnp.float32)})
-            new_state = {"residual": jax.tree.unflatten(treedef,
-                                                        new_rs)}
-            return params, opt_state, new_state, metrics
+            return params, opt_state, {"residual": new_resid}, metrics
 
         return compressed_step
 

@@ -17,9 +17,11 @@ mesh (where everything divides 1 and the specs degenerate gracefully).
 
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -139,6 +141,81 @@ def safe_param_specs(params, mesh: Mesh):
 
     return jax.tree_util.tree_unflatten(
         treedef, [spec_for(path, leaf) for path, leaf in flat])
+
+
+def fsdp_specs(params, mesh: Mesh):
+    """FSDP-style param (and optimizer-moment) PartitionSpecs: shard
+    over the worker axes *on top of* the model-axis tensor parallelism.
+
+    ``safe_param_specs`` replicates every leaf across the (pod, data)
+    worker axes -- each coded worker holds the full model, which is
+    what keeps yi-34b/deepseek-33b dry-run-only. Here each leaf
+    additionally donates one dim to the worker axes: the largest dim
+    not already taken by the model axis whose size divides the worker
+    count. Leaves with no such dim keep their ``safe_param_specs``
+    placement (the same divisibility-fallback contract, so the rules
+    stay valid from the 1-device test mesh -- where everything divides
+    1 -- to the 2x16x16 production mesh). GSPMD all-gathers a layer's
+    params at use and frees them after, trading collective time for
+    the m-fold parameter memory the replicated placement pays.
+
+    Adam's m/v moments follow the same specs (the driver maps these
+    over opt_state), so the optimizer state -- 2x the param bytes --
+    shards identically.
+    """
+    base = safe_param_specs(params, mesh)
+    da = data_axes(mesh)
+    da1 = da if len(da) > 1 else da[0]
+    n_workers = _worker_count(mesh)
+    if n_workers <= 1:
+        return base
+
+    def upgrade(leaf, spec: P) -> P:
+        shape = tuple(leaf.shape)
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        best = -1
+        for dim, size in enumerate(shape):
+            if axes[dim] is not None:
+                continue
+            if size % n_workers:
+                continue
+            if best < 0 or size > shape[best]:
+                best = dim
+        if best < 0:
+            return spec
+        axes[best] = da1
+        return P(*axes)
+
+    leaves, treedef = jax.tree.flatten(params)
+    specs = treedef.flatten_up_to(base)
+    return treedef.unflatten(
+        [upgrade(leaf, spec) for leaf, spec in zip(leaves, specs)])
+
+
+def bytes_per_device(shapes, specs, mesh: Mesh) -> int:
+    """Per-device bytes of a pytree under its PartitionSpec placement.
+
+    Pure metadata (works on ShapeDtypeStructs -- no compile, no
+    allocation): each leaf's bytes divided by the product of the mesh
+    axis sizes its spec names, summed over leaves. ``specs`` leaves may
+    be PartitionSpecs or NamedShardings. This is the accounting the
+    dry-run reports for the replicated-vs-FSDP parameter memory
+    comparison.
+    """
+    leaves, treedef = jax.tree.flatten(shapes)
+    spec_leaves = treedef.flatten_up_to(specs)
+    total = 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        spec = getattr(spec, "spec", spec)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= int(mesh.shape[a])
+        nbytes = math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+        total += -(-nbytes // shards)  # ceil: padding shard counts too
+    return int(total)
 
 
 def cache_batch_dim(keys: Tuple[str, ...]) -> int:

@@ -16,6 +16,14 @@ streaming reduction over an int8 (or float32) payload with per-row
 dequant scales folded into the combine weights -- dequantize, weight
 and reduce in one pass, reading 1 byte/component off the wire format
 instead of 4.
+
+``packed_sign_combine`` pushes the wire format to its 1-bit floor: the
+payload is the ``sign_packed`` codec's uint8 bit-plane (8 signs/byte,
+little-endian), and the kernel unpacks (shift/mask), maps bits to
++-1, weights and reduces in one pass -- 1/8 byte/component off the
+wire, and as with ``quantized_combine`` no float32 per-machine
+gradient tile is ever materialised (one (block_d,) sign strip per
+accumulation step).
 """
 
 from __future__ import annotations
@@ -92,6 +100,73 @@ def quantized_combine(q: jnp.ndarray, scales: jnp.ndarray,
         interpret=interpret,
     )(q, u)
     return out[:d] if pad else out
+
+
+def _packed_sign_combine_kernel(q_ref, u_ref, o_ref):
+    # Same accumulation-chain shape as _quantized_combine_kernel, with
+    # the dequant replaced by an in-register unpack: shift/mask the
+    # byte tile into its 8 bit planes, map {0,1} -> {-1,+1}, and fold
+    # u[b] * sign into the accumulator one row strip at a time.
+    q = q_ref[...]                               # (n_blocks, block_db) u8
+    u = u_ref[...].astype(jnp.float32)           # (n_blocks,)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    acc = jnp.zeros((q.shape[1] * 8,), jnp.float32)
+    for b in range(q.shape[0]):
+        bits = ((q[b][:, None] >> shifts) & jnp.uint8(1)).reshape(-1)
+        acc = acc + u[b] * (2.0 * bits.astype(jnp.float32) - 1.0)
+    o_ref[...] = acc
+
+
+def _pick_block_db(n_blocks: int, db: int) -> int:
+    # Per grid step: n_blocks * block_db payload bytes + 32 * block_db
+    # bytes of unpacked f32 strip/accumulator.
+    budget = 4 * 1024 * 1024 // (max(n_blocks, 1) + 32)
+    bd = max(128, min(db, budget))
+    if bd > 128:
+        bd -= bd % 128  # byte-lane alignment (f32 out stays 128-lane)
+    return min(bd, db)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "block_db", "interpret"))
+def packed_sign_combine(q: jnp.ndarray, scales: jnp.ndarray,
+                        w: jnp.ndarray, *, d: int,
+                        block_db: int | None = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused unpack-dequantize-weight-combine over a packed sign
+    payload: (n_blocks, ceil(d/8)) uint8 bit-planes + (n_blocks,)
+    scales + (n_blocks,) decoding weights -> (d,) float32.
+
+    ``d`` is the true component count (static): byte padding -- both
+    the codec's trailing-byte zero bits and the grid's block padding --
+    unpacks to -1 signs at positions >= d, which the final slice
+    drops before they can contribute. As in ``quantized_combine`` the
+    dequant scale folds into the combine weight outside the grid
+    (u = w * scales), dead rows contribute exact zeros (u_b = 0), and
+    the uint8 native tile on TPU is (32, 128); smoke-scale n_blocks
+    rides interpret mode (CPU CI) where the constraint does not bind.
+    """
+    n_blocks, db = q.shape
+    if db != (d + 7) // 8:
+        raise ValueError(f"payload width {db} != ceil({d}/8)")
+    u = w.astype(jnp.float32) * scales.astype(jnp.float32)
+    bd = block_db or _pick_block_db(n_blocks, db)
+    pad = (-db) % bd
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+    padded_db = q.shape[1]
+    out = pl.pallas_call(
+        _packed_sign_combine_kernel,
+        grid=(padded_db // bd,),
+        in_specs=[
+            pl.BlockSpec((n_blocks, bd), lambda i: (0, i)),
+            pl.BlockSpec((n_blocks,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((8 * bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((8 * padded_db,), jnp.float32),
+        interpret=interpret,
+    )(q, u)
+    return out[:d]
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

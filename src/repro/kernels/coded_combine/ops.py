@@ -9,6 +9,8 @@ anyway.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -50,6 +52,41 @@ def quantized_combine(q: jnp.ndarray, scales: jnp.ndarray,
     if jax.default_backend() == "tpu":
         return kernel.quantized_combine(q, scales, w)
     return ref.quantized_combine(q, scales, w)
+
+
+def packed_sign_combine(q: jnp.ndarray, scales: jnp.ndarray,
+                        w: jnp.ndarray, d: int) -> jnp.ndarray:
+    """q: (n_blocks, ceil(d/8)) packed signs; scales, w: (n_blocks,)
+    -> (d,) f32."""
+    if _FORCE == "ref":
+        return ref.packed_sign_combine(q, scales, w, d)
+    if _FORCE == "pallas":
+        return kernel.packed_sign_combine(
+            q, scales, w, d=d, interpret=jax.default_backend() != "tpu")
+    if jax.default_backend() == "tpu":
+        return kernel.packed_sign_combine(q, scales, w, d=d)
+    return ref.packed_sign_combine(q, scales, w, d)
+
+
+def packed_sign_combine_tree(q_tree, scale_tree, w: jnp.ndarray, shapes):
+    """Fused unpack-weight-combine over a packed-sign payload pytree.
+
+    ``q_tree`` leaves are (n_blocks, ceil(size/8)) uint8 bit-planes --
+    the packed payload cannot carry its own unpacked width, so
+    ``shapes`` is the matching pytree of combined-output shapes (each
+    original leaf's shape with the leading row axis dropped). Dead
+    rows' payloads never contribute (w_b * scale_b == 0 exactly), as
+    in ``quantized_combine_tree``.
+    """
+    q_leaves, treedef = jax.tree.flatten(q_tree)
+    s_leaves = treedef.flatten_up_to(scale_tree)
+    shape_leaves = treedef.flatten_up_to(shapes)
+    outs = []
+    for q, s, shp in zip(q_leaves, s_leaves, shape_leaves):
+        d = math.prod(shp)
+        out = packed_sign_combine(q.reshape(q.shape[0], -1), s, w, d)
+        outs.append(out.reshape(tuple(shp)))
+    return jax.tree.unflatten(treedef, outs)
 
 
 def quantized_combine_tree(q_tree, scale_tree, w: jnp.ndarray):

@@ -34,6 +34,47 @@ def quantized_combine(q: jnp.ndarray, scales: jnp.ndarray,
     return acc
 
 
+def packed_sign_combine(q: jnp.ndarray, scales: jnp.ndarray,
+                        w: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Fused unpack-weight-combine over packed signs, jnp fallback.
+
+    q: (n_blocks, ceil(d/8)) uint8 bit-planes (little-endian, bit=1
+    <-> +1); scales, w: (n_blocks,). Mirrors ``quantized_combine``'s
+    accumulation chain with the dequant replaced by shift/mask
+    unpacking -- one (8 * bytes,) sign strip per row, never an
+    (n_blocks, d) float32 tile. Positions >= d (trailing-byte zero
+    padding) are sliced off before they contribute.
+    """
+    u = w.astype(jnp.float32) * scales.astype(jnp.float32)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    acc = jnp.zeros((q.shape[1] * 8,), jnp.float32)
+    for b in range(q.shape[0]):
+        bits = ((q[b][:, None] >> shifts) & jnp.uint8(1)).reshape(-1)
+        acc = acc + u[b] * (2.0 * bits.astype(jnp.float32) - 1.0)
+    return acc[:d]
+
+
+def packed_sign_combine_np(q: np.ndarray, scales: np.ndarray,
+                           w: np.ndarray, d: int) -> np.ndarray:
+    """NumPy oracle for ``packed_sign_combine``: exact float64 combine,
+    decoded by ``np.unpackbits(bitorder="little")`` -- an unpacker
+    independent of the codec's own shift/mask implementation, so this
+    pin cross-checks the bit-order convention as well as the
+    arithmetic. Same two comparison regimes as ``quantized_combine_np``
+    (bitwise on power-of-two w/scales -- a +-1 payload is integral --
+    and tolerance in general).
+    """
+    u = (np.asarray(w, np.float32)
+         * np.asarray(scales, np.float32)).astype(np.float64)
+    bits = np.unpackbits(np.asarray(q, np.uint8), axis=1,
+                         bitorder="little")[:, :d]
+    signs = 2.0 * bits.astype(np.float64) - 1.0
+    acc = np.zeros(d, np.float64)
+    for b in range(q.shape[0]):
+        acc = acc + u[b] * signs[b]
+    return acc.astype(np.float32)
+
+
 def quantized_combine_np(q: np.ndarray, scales: np.ndarray,
                          w: np.ndarray) -> np.ndarray:
     """NumPy dequantize oracle for ``quantized_combine``: the EXACT

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs import (ALL_SHAPES, ARCH_IDS, CodingConfig, get_config)
 from repro.dist import coded_train
+from repro.dist import sharding as rules
 from repro.launch import hlo_analysis
 from repro.launch import roofline as rl_mod
 from repro.launch import specs as specs_mod
@@ -32,7 +33,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.optim import optimizers as opt_mod
 
 
-def build_step(cfg, shape, mesh, coding):
+def build_step(cfg, shape, mesh, coding, fsdp=False):
     from repro.models import model as M
     # Sequence/tensor-sharded residual checkpoints (see EXPERIMENTS.md
     # #Perf iteration 1); REPRO_RESIDUAL_SHARDING=0 reproduces the
@@ -45,7 +46,7 @@ def build_step(cfg, shape, mesh, coding):
                                 model_size=mesh.shape["model"])
     else:
         M.set_residual_sharding()
-    spec = specs_mod.make_step_spec(cfg, shape, mesh, coding)
+    spec = specs_mod.make_step_spec(cfg, shape, mesh, coding, fsdp=fsdp)
     if spec.kind == "train":
         optimizer = opt_mod.get_optimizer("adamw", 1e-4)
         # k=16 keeps every assigned config (incl. the 33B dense ones)
@@ -61,8 +62,37 @@ def build_step(cfg, shape, mesh, coding):
     return fn, spec
 
 
+def param_bytes_per_device(spec, mesh) -> int:
+    """Per-device parameter bytes of a StepSpec's placement (metadata
+    only -- the FSDP-vs-replicated comparison the dry-run reports)."""
+    return rules.bytes_per_device(spec.args[0], spec.in_shardings[0],
+                                  mesh)
+
+
+def specs_one(arch: str, shape_name: str, *, multi_pod: bool,
+              fsdp: bool, verbose: bool = True) -> dict:
+    """Spec-only dry-run: build the StepSpec (no lower/compile) and
+    report the per-device parameter placement bytes. Cheap enough to
+    run for every arch under both placements; the FSDP acceptance check
+    in tests/test_system.py parses the DRYRUN_SPECS_JSON line."""
+    cfg = get_config(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    coding = CodingConfig(replication=4)
+    spec = specs_mod.make_step_spec(cfg, shape, mesh, coding, fsdp=fsdp)
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "fsdp": fsdp, "status": "ok", "kind": spec.kind,
+        "param_bytes_per_device": param_bytes_per_device(spec, mesh),
+    }
+    if verbose:
+        print("DRYRUN_SPECS_JSON:" + json.dumps(result))
+        sys.stdout.flush()
+    return result
+
+
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
-               verbose: bool = True) -> dict:
+               fsdp: bool = False, verbose: bool = True) -> dict:
     cfg = get_config(arch)
     shape = {s.name: s for s in ALL_SHAPES}[shape_name]
     if shape.name == "long_500k":
@@ -73,7 +103,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
                     "reason": why}
     mesh = make_production_mesh(multi_pod=multi_pod)
     coding = CodingConfig(replication=4)
-    fn, spec = build_step(cfg, shape, mesh, coding)
+    fn, spec = build_step(cfg, shape, mesh, coding, fsdp=fsdp)
     t0 = time.time()
     with mesh:
         jitted = jax.jit(fn, in_shardings=spec.in_shardings,
@@ -94,6 +124,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
     rl = rl_mod.roofline_report(stats, n_chips, model)
     result = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "fsdp": fsdp,
         "status": "ok",
         "n_chips": int(n_chips),
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
@@ -102,6 +133,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
             "output_bytes": int(mem.output_size_in_bytes),
             "temp_bytes": int(mem.temp_size_in_bytes),
             "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+            "param_bytes_per_device": param_bytes_per_device(spec, mesh),
         },
         "model": model,
         "roofline": rl,
@@ -132,6 +164,12 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", choices=("single", "multi", "both"),
                     default="single")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params/opt-state over the worker axes "
+                         "(rules.fsdp_specs) instead of replicating")
+    ap.add_argument("--specs-only", action="store_true",
+                    help="build StepSpecs and report per-device param "
+                         "bytes without lowering/compiling")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -146,7 +184,14 @@ def main() -> None:
         for shape in shapes:
             for mp in pods:
                 try:
-                    results.append(dryrun_one(arch, shape, multi_pod=mp))
+                    if args.specs_only:
+                        results.append(specs_one(arch, shape,
+                                                 multi_pod=mp,
+                                                 fsdp=args.fsdp))
+                    else:
+                        results.append(dryrun_one(arch, shape,
+                                                  multi_pod=mp,
+                                                  fsdp=args.fsdp))
                 except Exception as e:  # noqa: BLE001
                     traceback.print_exc()
                     results.append({"arch": arch, "shape": shape,

@@ -104,12 +104,21 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
 
 def make_step_spec(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
                    coding: Optional[CodingConfig] = None,
-                   optimizer_name: str = "adamw") -> StepSpec:
-    """Build the StepSpec for one (arch, shape) on a mesh."""
+                   optimizer_name: str = "adamw",
+                   fsdp: bool = False) -> StepSpec:
+    """Build the StepSpec for one (arch, shape) on a mesh.
+
+    ``fsdp=True`` swaps the replicated-over-workers param placement for
+    ``rules.fsdp_specs``: params and the Adam moments additionally
+    shard one dim over the (pod, data) worker axes, which is what lets
+    the 33B+ configs fit per-device HBM (the dry-run records both
+    placements' ``param_bytes_per_device``).
+    """
     coding = coding or CodingConfig()
     params_shapes = jax.eval_shape(
         lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
-    param_spec = rules.safe_param_specs(params_shapes, mesh)
+    param_spec = (rules.fsdp_specs if fsdp
+                  else rules.safe_param_specs)(params_shapes, mesh)
     param_shard = rules.named(mesh, param_spec)
     da = rules.data_axes(mesh)
     da1 = da if len(da) > 1 else da[0]

@@ -25,11 +25,16 @@ weighted by v = A @ w (~1x uncoded FLOPs); ``--no-dedup`` materialises
 the replicated (m, load, ...) machine batch, the faithful simulation of
 a real straggling cluster; ``--collective manual`` additionally routes
 the combine through the explicit ``coded_allreduce`` shard_map psum
-(replicated path only). ``--compress sign|int8`` composes the coding
-layer with gradient compression: per-worker quantization with error
-feedback, the fused quantized combine, comm-bytes-per-step in the
+(replicated path only), and ``--stream-chunk N`` swaps its
+materialised combine for the ``lax.scan`` streaming accumulator that
+keeps only one machine chunk of gradients live per worker shard.
+``--compress sign|sign_packed|int8`` composes the coding layer with
+gradient compression: per-worker quantization with error feedback, the
+fused quantized (or packed-sign) combine, comm-bytes-per-step in the
 on-device metrics, and the residual state checkpointed alongside
-opt_state so resumes stay bit-identical.
+opt_state so resumes stay bit-identical. ``--fsdp`` shards params and
+Adam moments over the worker axes (``rules.fsdp_specs``) instead of
+replicating them.
 
   python -m repro.launch.train --arch qwen1.5-4b --steps 20 \
       --straggler-p 0.2 --scheme expander --decoding optimal
@@ -81,11 +86,20 @@ def main(argv=None) -> dict:
                          "explicit coded_allreduce shard_map (manual "
                          "implies the replicated path)")
     ap.add_argument("--compress", default="none",
-                    choices=("none", "sign", "int8"),
+                    choices=("none", "sign", "sign_packed", "int8"),
                     help="quantize per-worker gradients before the "
                          "coded combine (error feedback on; the fused "
-                         "quantized_combine kernel consumes the "
-                         "payload directly)")
+                         "quantized_combine / packed_sign_combine "
+                         "kernel consumes the payload directly)")
+    ap.add_argument("--stream-chunk", type=int, default=0,
+                    help="stream the manual-collective combine over "
+                         "machine chunks of this size per worker shard "
+                         "(0: materialise all per-machine gradients; "
+                         "requires --collective manual)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params and Adam moments over the "
+                         "worker axes (rules.fsdp_specs) instead of "
+                         "replicating them")
     ap.add_argument("--lookahead", type=int, default=8,
                     help="straggler rounds pre-sampled and decoded per "
                          "batched decode_batch call")
@@ -117,6 +131,10 @@ def main(argv=None) -> dict:
         # The error-feedback residual updates once per compression
         # round, i.e. per full-batch step.
         ap.error("--compress does not compose with --microbatches")
+    if args.stream_chunk and args.collective != "manual":
+        ap.error("--stream-chunk requires --collective manual (the "
+                 "streaming accumulator replaces the materialised "
+                 "manual combine)")
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -228,7 +246,8 @@ def main(argv=None) -> dict:
     da = rules.data_axes(mesh)
     da1 = da if len(da) > 1 else da[0]
     M.set_residual_sharding(batch_axes=da1, model_axis="model")
-    pspec = rules.safe_param_specs(params, mesh)
+    pspec = (rules.fsdp_specs if args.fsdp
+             else rules.safe_param_specs)(params, mesh)
     pshard = rules.named(mesh, pspec)
     repl = rules.replicated(mesh)
     oshard = {"step": repl, "m": pshard, "v": pshard}
@@ -237,7 +256,8 @@ def main(argv=None) -> dict:
     if args.collective == "manual":
         train_step = coded_train.make_manual_collective_train_step(
             cfg, optimizer, mesh, alpha_weights=alpha_w,
-            compress=compress)
+            compress=compress,
+            streaming_chunk=args.stream_chunk or None)
     else:
         train_step = coded_train.make_train_step(
             cfg, optimizer, n_microbatches=args.microbatches,
@@ -355,6 +375,8 @@ def main(argv=None) -> dict:
                       "path": "dedup" if dedup else "replicated",
                       "collective": args.collective,
                       "compress": args.compress,
+                      "stream_chunk": args.stream_chunk,
+                      "fsdp": bool(args.fsdp),
                       "comm_bytes_per_step": comm_bytes,
                       "comm_bytes_per_step_float32": comm_bytes_f32,
                       "decode_calls": runtime.decode_calls}))

@@ -96,6 +96,42 @@ def test_compressed_resume_is_bit_identical(tmp_path):
         f"{full['losses'][MID:]}")
 
 
+def test_sign_packed_resume_is_bit_identical(tmp_path):
+    """The packed 1-bit codec's residual (always float32 at gradient
+    shape -- only the wire payload is packed) threads through the
+    checkpoint exactly like int8's: a resumed --compress sign_packed
+    run replays the loss stream bitwise."""
+    flags = ("--dedup", "--lookahead", "3", "--compress", "sign_packed")
+    full = _run_driver("--steps", str(STEPS), *flags)
+
+    ck = str(tmp_path / "ck")
+    first = _run_driver("--steps", str(MID), *flags, "--ckpt-dir", ck,
+                        "--ckpt-every", str(EVERY))
+    assert first["losses"] == full["losses"][:MID]
+
+    resumed = _run_driver("--steps", str(STEPS), *flags, "--ckpt-dir",
+                          ck, "--ckpt-every", str(EVERY))
+    assert resumed["start_step"] == MID
+    assert resumed["losses"] == full["losses"][MID:], (
+        f"sign_packed resume diverged:\n{resumed['losses']}\nvs\n"
+        f"{full['losses'][MID:]}")
+
+
+def test_sign_to_sign_packed_warm_start(tmp_path):
+    """A --compress sign checkpoint restores into a --compress
+    sign_packed run: the error-feedback residual is codec-independent
+    state (float32 rows at parameter shape), so switching the wire
+    codec mid-training keeps the residual instead of dropping it."""
+    ck = str(tmp_path / "ck")
+    _run_driver("--steps", str(MID), "--dedup", "--lookahead", "3",
+                "--compress", "sign", "--ckpt-dir", ck)
+    resumed = _run_driver("--steps", str(STEPS), "--dedup",
+                          "--lookahead", "3", "--compress",
+                          "sign_packed", "--ckpt-dir", ck)
+    assert resumed["start_step"] == MID
+    assert len(resumed["losses"]) == STEPS - MID
+
+
 def test_compress_resumes_from_uncompressed_checkpoint(tmp_path):
     """An uncompressed {params, opt_state} checkpoint restores into a
     --compress run (fresh zero residual) -- the layout-compatibility

@@ -75,6 +75,28 @@ def check_sign_roundtrip(g: np.ndarray) -> None:
     assert np.all((deq * g).sum(axis=-1)[live] > 0)
 
 
+def check_sign_packed_roundtrip(g: np.ndarray) -> None:
+    codec = cm.get_codec("sign_packed")
+    d = g.shape[-1]
+    q, s = codec.compress(g, xp=np)
+    assert q.dtype == np.uint8
+    assert q.shape == g.shape[:-1] + (cm.packed_width(d),)
+    # same L1 scale as the unpacked sign codec
+    np.testing.assert_allclose(
+        s, np.mean(np.abs(g), axis=-1).astype(np.float32), rtol=1e-6)
+    deq = codec.decompress(q, s, xp=np, d=d)
+    assert deq.shape == g.shape
+    # bit convention: g >= 0 -> +scale, g < 0 -> -scale; agrees with
+    # the unpacked sign codec's dequantized value wherever g != 0 (the
+    # g == 0 disagreement -- packed says +scale, sign says 0 -- is
+    # absorbed by error feedback)
+    sq, ss = cm.get_codec("sign").compress(g, xp=np)
+    sdeq = cm.get_codec("sign").decompress(sq, ss, xp=np)
+    np.testing.assert_array_equal(deq[g != 0], sdeq[g != 0])
+    live = np.any(g, axis=-1)
+    assert np.all((deq * g).sum(axis=-1)[live] > 0)
+
+
 def _random_rows(rng: np.random.Generator) -> np.ndarray:
     rows = int(rng.integers(1, 6))
     d = int(rng.integers(1, 600))
@@ -90,6 +112,7 @@ def test_roundtrip_bounds_seeded():
         g = _random_rows(rng)
         check_int8_roundtrip(g)
         check_sign_roundtrip(g)
+        check_sign_packed_roundtrip(g)
 
 
 if HAS_HYP:
@@ -100,6 +123,7 @@ if HAS_HYP:
         g = _random_rows(np.random.default_rng(seed))
         check_int8_roundtrip(g)
         check_sign_roundtrip(g)
+        check_sign_packed_roundtrip(g)
 
 
 def test_none_codec_is_float32_passthrough():
@@ -134,6 +158,38 @@ def test_sign_codec_np_jnp_payload_bitwise_scale_close():
     np.testing.assert_allclose(sn, np.asarray(sj), rtol=1e-6)
 
 
+@pytest.mark.parametrize("d", [1, 7, 8, 9, 64, 700])
+def test_pack_unpack_signs_inverse_and_unpackbits_oracle(d):
+    """pack_signs/unpack_signs are exact inverses at every width (incl.
+    non-multiples of 8), np and jnp agree bitwise (pure integer
+    shift/mask arithmetic), and numpy's own np.unpackbits little-endian
+    decoder reads the same bits back -- an independent check of the
+    bit convention."""
+    rng = np.random.default_rng(d)
+    bits = rng.integers(0, 2, size=(3, d)).astype(np.uint8)
+    qn = cm.pack_signs(bits, np)
+    qj = cm.pack_signs(jnp.asarray(bits), jnp)
+    assert qn.shape == (3, cm.packed_width(d))
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    np.testing.assert_array_equal(cm.unpack_signs(qn, np, d=d), bits)
+    np.testing.assert_array_equal(
+        np.asarray(cm.unpack_signs(qj, jnp, d=d)), bits)
+    oracle = np.unpackbits(qn, axis=-1, bitorder="little")[:, :d]
+    np.testing.assert_array_equal(oracle, bits)
+
+
+def test_sign_packed_codec_np_jnp_payload_bitwise_scale_close():
+    """Like the unpacked sign codec: the packed payload is pure integer
+    arithmetic (bitwise np == jnp); the mean-|g| scale is summation-
+    order sensitive, hence tolerance only."""
+    g = RNG.normal(size=(5, 700)).astype(np.float32)
+    codec = cm.get_codec("sign_packed")
+    qn, sn = codec.compress(g, xp=np)
+    qj, sj = jax.jit(codec.compress)(jnp.asarray(g))
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    np.testing.assert_allclose(sn, np.asarray(sj), rtol=1e-6)
+
+
 def test_get_codec_rejects_unknown():
     with pytest.raises(ValueError, match="unknown codec"):
         cm.get_codec("fp4")
@@ -145,7 +201,7 @@ def test_get_codec_rejects_unknown():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", ["sign", "int8"])
+@pytest.mark.parametrize("name", ["sign", "int8", "sign_packed"])
 def test_error_feedback_telescopes(name):
     """e_{t+1} = (g_t + e_t) - dequant_t telescopes:
     sum_t dequant_t == sum_t g_t - e_T. The codec's bias is bounded by
@@ -162,7 +218,8 @@ def test_error_feedback_telescopes(name):
         g = rng.normal(size=(rows, d))
         pre = (g + e).astype(np.float32)
         q, s = codec.compress(pre, xp=np)
-        deq = np.asarray(codec.decompress(q, s, xp=np), np.float64)
+        deq = np.asarray(codec.decompress(q, s, xp=np, d=d),
+                         np.float64)
         e = pre.astype(np.float64) - deq
         sum_g += g
         sum_deq += deq
@@ -191,6 +248,24 @@ def test_comm_bytes_per_step():
     # sign ships the same int8 container + scales as int8
     assert cm.comm_bytes_per_step(cm.get_codec("sign"), 4, params) \
         == cm.comm_bytes_per_step(cm.get_codec("int8"), 4, params)
+    # sign_packed ships ceil(size/8) bytes per leaf: ceil(15/8) +
+    # ceil(9/8) = 2 + 2 payload bytes + two float32 scales, per row
+    assert cm.comm_bytes_per_step(cm.get_codec("sign_packed"), 4,
+                                  params) == 4 * ((2 + 2) + 2 * 4)
+
+
+def test_sign_packed_comm_ratio_under_5_percent():
+    """At realistic leaf sizes the packed wire payload is ~1/32 of the
+    float32 combine -- the <= 0.05x acceptance the benchmark comm
+    report enforces."""
+    params = {"w": jnp.zeros((256, 128)), "b": jnp.zeros(512)}
+    packed = cm.comm_bytes_per_step(cm.get_codec("sign_packed"), 4,
+                                    params)
+    f32 = cm.comm_bytes_per_step(None, 4, params)
+    assert packed <= 0.05 * f32
+    # and the unpacked sign codec does NOT clear that bar
+    sign = cm.comm_bytes_per_step(cm.get_codec("sign"), 4, params)
+    assert sign > 0.05 * f32
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +418,23 @@ def test_quantized_allreduce_matches_tree_combine():
     w = jnp.asarray([2.0], jnp.float32)
     out = coded_train.quantized_coded_allreduce(q_tree, s_tree, w, mesh)
     expect = cc_ops.quantized_combine_tree(q_tree, s_tree, w)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(expect["w"]), rtol=1e-6)
+
+
+def test_packed_allreduce_matches_tree_combine():
+    """The shard_map packed-sign collective == the local fused packed
+    tree combine (single-shard mesh: the psum is an identity)."""
+    mesh = make_test_mesh((1, 1))
+    shapes = {"w": (2, 4)}  # d = 8 -> one packed byte per row
+    q_tree = {"w": jnp.asarray(RNG.integers(0, 256, size=(1, 1)),
+                               jnp.uint8)}
+    s_tree = {"w": jnp.asarray([1.5], jnp.float32)}
+    w = jnp.asarray([2.0], jnp.float32)
+    out = coded_train.packed_sign_coded_allreduce(q_tree, s_tree, w,
+                                                  mesh, shapes)
+    expect = cc_ops.packed_sign_combine_tree(q_tree, s_tree, w, shapes)
+    assert out["w"].shape == (2, 4)
     np.testing.assert_allclose(np.asarray(out["w"]),
                                np.asarray(expect["w"]), rtol=1e-6)
 

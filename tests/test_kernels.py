@@ -187,6 +187,94 @@ def test_quantized_combine_matches_dequantized_coded_combine():
                                rtol=2e-5, atol=2e-5)
 
 
+def _exact_packed(rng, n, D):
+    """Exactness-preserving packed inputs: arbitrary bit payload,
+    power-of-two scales, {-1, 0, 1} x power-of-two weights -- every
+    product and partial sum is a small exact float32."""
+    q = rng.integers(0, 256, size=(n, (D + 7) // 8)).astype(np.uint8)
+    s = (2.0 ** rng.integers(-4, 1, size=n)).astype(np.float32)
+    w = (rng.choice([-1.0, 0.0, 1.0], size=n)
+         * 2.0 ** rng.integers(-2, 3, size=n)).astype(np.float32)
+    return q, s, w
+
+
+@pytest.mark.parametrize("n,D", [(1, 256), (2, 130), (4, 1000),
+                                 (7, 61), (16, 4096), (3, 129),
+                                 (5, 8)])
+def test_packed_sign_combine_kernel_bit_identical_to_np(n, D):
+    """The fused unpack-weight-combine pins BITWISE against the exact
+    float64 NumPy oracle (np.unpackbits decoder) on exactness-
+    preserving inputs -- across widths that are and are not multiples
+    of 8 (trailing-byte padding) and zeroed straggler rows. The jnp
+    fallback must land on the same bits."""
+    rng = np.random.default_rng(n * 1000 + D)
+    q, s, w = _exact_packed(rng, n, D)
+    ref = cc_r.packed_sign_combine_np(q, s, w, D)
+    out = cc_k.packed_sign_combine(jnp.asarray(q), jnp.asarray(s),
+                                   jnp.asarray(w), d=D, interpret=True)
+    assert out.shape == (D,)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    fallback = cc_r.packed_sign_combine(jnp.asarray(q), jnp.asarray(s),
+                                        jnp.asarray(w), D)
+    np.testing.assert_array_equal(np.asarray(fallback), ref)
+
+
+@pytest.mark.parametrize("block_db", [8, 128, None])
+def test_packed_sign_combine_block_db_variants(block_db):
+    """Grid tiling over the packed axis cannot change a single bit."""
+    rng = np.random.default_rng(9)
+    D = 3000  # padded packed axis: 375 bytes -> lane-aligned tiles
+    q, s, w = _exact_packed(rng, 4, D)
+    ref = cc_r.packed_sign_combine_np(q, s, w, D)
+    out = cc_k.packed_sign_combine(jnp.asarray(q), jnp.asarray(s),
+                                   jnp.asarray(w), d=D,
+                                   block_db=block_db, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_packed_sign_combine_general_inputs_tolerance():
+    """General scales/weights: float32 accumulation vs the f64 oracle,
+    bounded by the repo's kernel tolerance."""
+    rng = np.random.default_rng(17)
+    n, D = 6, 700
+    q = rng.integers(0, 256, size=(n, (D + 7) // 8)).astype(np.uint8)
+    s = (rng.uniform(0.1, 2.0, size=n)
+         * 10.0 ** rng.integers(-2, 3, size=n)).astype(np.float32)
+    w = rng.normal(size=n).astype(np.float32)
+    ref = np.asarray(cc_r.packed_sign_combine_np(q, s, w, D),
+                     np.float64)
+    out = cc_k.packed_sign_combine(jnp.asarray(q), jnp.asarray(s),
+                                   jnp.asarray(w), d=D, interpret=True)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(out, np.float64) / scale,
+                               ref / scale, atol=2e-5, rtol=0)
+
+
+def test_dead_rows_cannot_influence_packed_combine():
+    """w_j == 0 zeroes u_j = w_j * s_j exactly: perturbing a straggler
+    row's packed payload must leave the combine BITWISE unchanged."""
+    rng = np.random.default_rng(5)
+    D = 400
+    q, s, w = _exact_packed(rng, 5, D)
+    w[1] = 0.0
+    w[3] = 0.0
+    q2 = q.copy()
+    q2[1] = 0xFF
+    q2[3] = 0x00
+    for fn in (lambda *a: cc_r.packed_sign_combine_np(*a, D),
+               lambda *a: cc_k.packed_sign_combine(
+                   *map(jnp.asarray, a), d=D, interpret=True)):
+        np.testing.assert_array_equal(np.asarray(fn(q, s, w)),
+                                      np.asarray(fn(q2, s, w)))
+
+
+def test_packed_sign_combine_rejects_mismatched_width():
+    q = jnp.zeros((2, 4), jnp.uint8)
+    with pytest.raises(ValueError, match="width"):
+        cc_k.packed_sign_combine(q, jnp.ones(2), jnp.ones(2), d=64,
+                                 interpret=True)
+
+
 @pytest.mark.parametrize("T,n,bt", [(4, 128, None), (10, 130, 8),
                                     (64, 1000, 16), (1, 256, None),
                                     (33, 384, 8)])

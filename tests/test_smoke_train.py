@@ -65,6 +65,60 @@ def test_train_driver_smoke_manual_collective():
     assert summary["last_loss"] < summary["first_loss"] + 1.0
 
 
+def test_train_driver_smoke_streaming_manual():
+    """--stream-chunk routes the manual collective through the
+    lax.scan streaming accumulator end to end (on the driver's m = 4
+    workers over 4 data shards the scan is a single chunk -- the
+    multi-chunk differential lives in tests/test_streaming.py)."""
+    summary = _run_driver("--collective", "manual", "--stream-chunk",
+                          "1", "--lookahead", "4", "--log-every", "6")
+    assert summary["steps"] == 12
+    assert summary["collective"] == "manual"
+    assert summary["stream_chunk"] == 1
+    assert np.isfinite(summary["last_loss"])
+    assert summary["last_loss"] < summary["first_loss"] + 1.0
+
+
+def test_train_driver_smoke_fsdp():
+    """--fsdp swaps the replicated param placement for the
+    worker-sharded fsdp_specs; the training stream itself must be
+    unaffected (same algebra, different layout)."""
+    summary = _run_driver("--dedup", "--fsdp", "--lookahead", "6",
+                          "--log-every", "4")
+    assert summary["steps"] == 12
+    assert summary["fsdp"] is True
+    assert np.isfinite(summary["last_loss"])
+    assert summary["last_loss"] < summary["first_loss"] + 1.0
+
+
+def test_train_driver_smoke_compressed_sign_packed():
+    """The packed 1-bit wire codec end to end on the dedup path: the
+    8-per-byte payload must clear the 0.05x comm acceptance bar."""
+    summary = _run_driver("--dedup", "--compress", "sign_packed",
+                          "--lookahead", "6", "--log-every", "4")
+    assert summary["steps"] == 12
+    assert summary["compress"] == "sign_packed"
+    assert np.isfinite(summary["last_loss"])
+    assert summary["last_loss"] < summary["first_loss"] + 1.0
+    ratio = (summary["comm_bytes_per_step"]
+             / summary["comm_bytes_per_step_float32"])
+    assert ratio <= 0.05, \
+        f"sign_packed comm ratio {ratio:.4f} exceeds 0.05"
+
+
+def test_stream_chunk_requires_manual_collective():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--steps", "2",
+         "--stream-chunk", "1"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "--collective manual" in proc.stderr
+
+
 def test_train_driver_smoke_compressed_int8():
     """The compression-composed execution model end to end: int8
     quantization + error feedback + the fused quantized combine on the

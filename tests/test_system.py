@@ -119,6 +119,70 @@ def test_dryrun_machinery_tiny_mesh():
     assert mem.argument_size_in_bytes > 0
 
 
+def test_dryrun_machinery_tiny_mesh_fsdp():
+    """make_step_spec(fsdp=True) must lower and compile on the tiny
+    mesh too -- same path as above with the worker-sharded param
+    placement (on 1 worker fsdp_specs degenerates to the replicated
+    layout, which pins that the degenerate geometry stays valid)."""
+    from repro.configs.base import ShapeSpec
+    from repro.dist import coded_train
+    from repro.launch import specs as specs_mod
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim import optimizers as opt_mod
+
+    cfg = get_config("qwen1.5-4b").smoke_variant()
+    mesh = make_test_mesh((1, 1))
+    shape = ShapeSpec("tiny_train", 32, 8, "train")
+    coding = CodingConfig(replication=2)
+    spec = specs_mod.make_step_spec(cfg, shape, mesh, coding,
+                                    fsdp=True)
+    opt = opt_mod.get_optimizer("adamw", 1e-4)
+    fn = coded_train.make_train_step(cfg, opt, n_microbatches=2)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=spec.in_shardings,
+                           out_shardings=spec.out_shardings).lower(
+            *spec.args).compile()
+    assert compiled.memory_analysis().argument_size_in_bytes > 0
+
+
+@pytest.mark.slow
+def test_fsdp_shrinks_per_device_param_bytes():
+    """The PR-8 FSDP acceptance on the production geometry: the
+    specs-only dry-run of yi-34b on the 512-device mesh must place
+    strictly fewer per-device parameter bytes under --fsdp than the
+    replicated baseline (subprocess so the virtual-device count enters
+    XLA_FLAGS before jax initialises)."""
+    import json as json_mod
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    results = {}
+    for fsdp in (False, True):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", "yi-34b", "--shape", "train_4k",
+               "--specs-only"] + (["--fsdp"] if fsdp else [])
+        proc = subprocess.run(cmd, cwd=repo, env=env,
+                              capture_output=True, text=True,
+                              timeout=420)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("DRYRUN_SPECS_JSON:")][-1]
+        results[fsdp] = json_mod.loads(line.split(":", 1)[1])
+    repl, fsdp = results[False], results[True]
+    assert repl["fsdp"] is False and fsdp["fsdp"] is True
+    assert fsdp["param_bytes_per_device"] < \
+        repl["param_bytes_per_device"], (fsdp, repl)
+    # the shard factor is the worker count (pod x data axes), so the
+    # shrink is substantial, not marginal
+    assert fsdp["param_bytes_per_device"] * 8 <= \
+        repl["param_bytes_per_device"]
+
+
 def test_long_500k_skip_policy():
     from repro.launch import specs as specs_mod
     ok, why = specs_mod.long_500k_supported(
