@@ -16,6 +16,34 @@ in one pass -- the wire payload drops to ~0.25x of the float32 bytes
 ``--compress sign`` for the 1-bit signSGD-style codec or
 ``--compress none`` to recover the float32 combine bit-for-bit.
 
+Chaos mode (``--chaos <spec>``) switches straggler masks from sampled
+to *observed*: a seeded injector simulates per-machine completion
+timestamps, a heartbeat monitor derives each round's alive mask by
+deadline (exponential backoff per consecutive miss), and
+``--dead-after`` consecutive misses declare a machine dead -- which
+triggers an elastic re-assignment: the code is re-drawn over the
+survivors and training continues from the live state. The spec is
+semicolon-separated events over the *original* machine ids::
+
+    kill:J@S          machine J dies permanently at step S
+    rack:J,K,...@S    correlated failure: all listed machines die at S
+    delay:J@S-E[:X]   J's completion time x X (default 10) for [S, E)
+    flap:J@S-E[:K]    J alternates K steps dark / K healthy on [S, E)
+
+e.g. ``--chaos "kill:1@3;delay:2@5-8:20"``. The structured failure
+log lands in the summary's ``chaos`` object and, with
+``--event-log FILE``, as a JSON artifact:
+
+    {"spec": ..., "events": [{"step", "kind": straggle|recover|dead|
+     reassign, "machine", "detail"}, ...], "reassignments": [{"step",
+     "generation", "dead", "survivors", "m", "scheme", "replication",
+     "n_blocks", "rebuild_s"}, ...], "dead_machines": [...],
+     "steps_to_detect": {machine: steps}, "degraded_steps": N,
+     "m_final": M, "generations": G}
+
+Try: ``PYTHONPATH=src python examples/train_lm_coded.py --steps 20 \
+--straggler-p 0 --chaos "kill:1@5" --compress none``
+
     PYTHONPATH=src python examples/train_lm_coded.py [--arch ...]
 """
 

@@ -73,6 +73,36 @@ def latest_step(path: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def restore_fallback(path: str, templates,
+                     max_step: Optional[int] = None
+                     ) -> Tuple[int, str, Any]:
+    """Restore the newest *intact* checkpoint at or before ``max_step``.
+
+    Crash-resume must survive more than a clean kill: a chaos kill (or
+    disk-full, or a torn copy) can leave a discoverable ``.npz`` that
+    is truncated mid-zip, a corrupt sidecar, or a foreign layout. This
+    walks the saved steps newest-first, trying ``restore_any`` at
+    each, and falls back past any checkpoint that fails to load for
+    *any* reason -- a torn file must never wedge the resume when an
+    older intact step exists. Returns (step, label, state); raises
+    ValueError listing every per-step failure only when no checkpoint
+    loads at all.
+    """
+    steps = [s for s in saved_steps(path)
+             if max_step is None or s <= max_step]
+    failures = []
+    for s in reversed(steps):
+        try:
+            label, state = restore_any(path, templates, step=s)
+            return s, label, state
+        except Exception as e:  # noqa: BLE001 -- torn files raise
+            # anything from BadZipFile to zlib.error to ValueError;
+            # every load failure means "try the previous step".
+            failures.append(f"step {s}: {type(e).__name__}: {e}")
+    raise ValueError("no intact checkpoint found: "
+                     + ("; ".join(failures) or "no steps saved"))
+
+
 def restore_any(path: str, templates, step: Optional[int] = None
                 ) -> Tuple[str, Any]:
     """Restore into the first matching template of an ordered list.

@@ -18,11 +18,21 @@ each grew their own copy of parts of that pipeline; this is the single
   and batched) -- the dedup train path's view of the same decode,
 - the Monte-Carlo debias scale (``debias_scale_mc``), computed by one
   ``batched_alpha`` call over a shared-uniform Bernoulli batch (the
-  sweep engine's sampling protocol).
+  sweep engine's sampling protocol),
+- the mask-*source* abstraction (``MaskSource`` and its three
+  implementations): where each round's alive mask comes from is
+  orthogonal to how it is decoded. ``SampledMaskSource`` draws from a
+  ``core.stragglers`` process (the simulation path every consumer used
+  until PR 9), ``ObservedMaskSource`` is fed masks derived from real
+  per-machine heartbeats (``repro.dist.failures``), and
+  ``ReplayedMaskSource`` replays a recorded (T, m) stream -- e.g. the
+  mask column of a failure-event log -- so an observed run can be
+  re-executed deterministically.
 """
 
 from __future__ import annotations
 
+import collections
 from typing import Tuple
 
 import numpy as np
@@ -54,6 +64,115 @@ def make_straggler_model(assignment: Assignment, name: str, p: float, *,
         return FixedCountStragglers(m=m, p=p)
     raise ValueError(f"unknown straggler model {name!r}; "
                      f"known: {STRAGGLER_MODELS}")
+
+
+class MaskSource:
+    """Where a round's (m,) alive mask comes from.
+
+    The decode pipeline below is source-agnostic: a mask is a mask
+    whether it was *sampled* from a synthetic straggler process,
+    *observed* from real machine heartbeats, or *replayed* from a
+    recorded stream. ``next_mask()`` yields one round's mask;
+    ``skip(rounds)`` fast-forwards the stream for checkpoint resume
+    (consuming exactly the state a per-round loop would).
+    """
+
+    m: int
+
+    def next_mask(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def skip(self, rounds: int) -> None:
+        if rounds < 0:
+            raise ValueError("rounds must be >= 0")
+        for _ in range(rounds):
+            self.next_mask()
+
+
+class SampledMaskSource(MaskSource):
+    """Masks drawn from a ``core.stragglers`` process -- the synthetic
+    simulation path. Holds (not copies) the model and RNG, so a runtime
+    that wraps its own ``(model, rng)`` pair consumes the exact RNG
+    stream the pre-abstraction code did (bit-identity pinned in
+    tests/test_coding_runtime.py)."""
+
+    def __init__(self, model: StragglerModel,
+                 rng: np.random.Generator, m: int):
+        self.model = model
+        self.rng = rng
+        self.m = m
+
+    def next_mask(self) -> np.ndarray:
+        return self.model.sample(self.rng)
+
+
+class ReplayedMaskSource(MaskSource):
+    """Replays a recorded (T, m) mask stream round for round -- the
+    deterministic re-execution path for observed failure traces (e.g.
+    the per-step masks a failure-event log recorded). Raises when the
+    recording is exhausted rather than silently resampling."""
+
+    def __init__(self, masks):
+        masks = np.asarray(masks, dtype=bool)
+        if masks.ndim != 2:
+            raise ValueError(f"masks must be (T, m), got {masks.shape}")
+        self.masks = masks
+        self.m = masks.shape[1]
+        self.cursor = 0
+
+    def next_mask(self) -> np.ndarray:
+        if self.cursor >= self.masks.shape[0]:
+            raise RuntimeError(
+                f"replayed mask stream exhausted after "
+                f"{self.masks.shape[0]} rounds")
+        row = self.masks[self.cursor]
+        self.cursor += 1
+        return row.copy()
+
+    def skip(self, rounds: int) -> None:
+        if rounds < 0:
+            raise ValueError("rounds must be >= 0")
+        if self.cursor + rounds > self.masks.shape[0]:
+            raise RuntimeError("cannot skip past the recorded stream")
+        self.cursor += rounds
+
+
+class ObservedMaskSource(MaskSource):
+    """Push-based source for masks derived from real heartbeats.
+
+    The failure detector (``repro.dist.failures.HeartbeatMonitor``)
+    owns *deriving* the mask from per-machine completion timestamps;
+    the driver pushes each round's derived mask here before asking the
+    runtime for weights, keeping the runtime's sample -> decode
+    protocol (and its memo cache / bookkeeping) identical across
+    sampled and observed execution. Pulling without a pushed mask is a
+    driver bug, not a resampling opportunity, and raises; ``skip`` is
+    rejected because an observed stream cannot be fast-forwarded --
+    resume re-observes instead.
+    """
+
+    def __init__(self, m: int):
+        self.m = m
+        self._queue: collections.deque = collections.deque()
+
+    def push(self, alive: np.ndarray) -> None:
+        alive = np.asarray(alive, dtype=bool)
+        if alive.shape != (self.m,):
+            raise ValueError(f"mask must be ({self.m},), "
+                             f"got {alive.shape}")
+        self._queue.append(alive.copy())
+
+    def next_mask(self) -> np.ndarray:
+        if not self._queue:
+            raise RuntimeError(
+                "no observed mask pushed for this round (push() the "
+                "heartbeat-derived mask before requesting weights)")
+        return self._queue.popleft()
+
+    def skip(self, rounds: int) -> None:
+        raise RuntimeError(
+            "observed mask streams cannot be fast-forwarded; resume "
+            "re-observes the cluster instead of replaying RNG")
 
 
 def sample_mask_stream(assignment: Assignment,

@@ -48,7 +48,9 @@ class FixedCountStragglers(StragglerModel):
     p: float
 
     def sample(self, rng: np.random.Generator) -> np.ndarray:
-        s = int(np.floor(self.p * self.m))
+        # Clamp: p >= 1 (every machine straggling) must yield the
+        # all-dead mask, not an over-sized choice() draw.
+        s = min(int(np.floor(self.p * self.m)), self.m)
         alive = np.ones(self.m, dtype=bool)
         alive[rng.choice(self.m, size=s, replace=False)] = False
         return alive

@@ -85,8 +85,8 @@ skeleton (``_coded_psum_allreduce``).
 
 Host side, ``CodingRuntime`` bridges ``repro.core``'s oracle into the
 training loop: it instantiates the assignment (expander / FRC /
-uncoded), samples one of the ``core.stragglers`` processes each step,
-and emits per-step w* through the shared
+uncoded), pulls one alive mask per step from its ``MaskSource``, and
+emits per-step w* through the shared
 ``core.step_weights`` pipeline (decode dispatch + alpha-bar debias via
 the batched engine), memoising repeated masks -- stagnant stragglers
 (the paper's cluster observation, the Markov model here) make the
@@ -94,6 +94,34 @@ decode cache hit almost every step. ``weights_lookahead`` pre-samples
 a horizon of masks and decodes the novel ones in one
 ``decode_batch`` call, for pipelined loops that refuse even the
 per-step cache-lookup latency.
+
+Observed-mask execution model (elastic fault tolerance)
+-------------------------------------------------------
+
+Where the masks come from is a ``core.step_weights.MaskSource``:
+*sampled* (the default -- a synthetic ``core.stragglers`` process,
+bit-identical to the pre-abstraction inline RNG), *observed* (the
+driver pushes masks the ``dist.failures.HeartbeatMonitor`` derived
+from per-machine completion timestamps -- a miss means that machine
+shipped no gradient this round, so the decode routes around it
+exactly as it would a sampled straggler), or *replayed* (a recorded
+(T, m) stream, for deterministic re-execution of failure traces).
+Everything downstream of ``step_weights()`` is source-agnostic.
+
+Observed masks add one genuinely new transition: permanent death.
+When the monitor declares a machine dead, ``elastic_reassign``
+re-draws the code over the m-1 survivors -- seed derived by the pure
+``elastic_seed(seed, generation)``, replication degraded
+deterministically to the largest feasible degree
+(``elastic_coding``) -- and the driver rebuilds its per-generation
+machinery (batcher, block shardings via the divisibility fallback,
+jitted step) around the live {params, opt_state}. Because both the
+re-assignment and a from-scratch launch on the survivors derive the
+same coding from (seed, generation) and data batches are a pure
+function of the step index, the elastic continuation is bit-identical
+to a fresh run started from the same state (tests/test_elastic.py).
+Lookahead prefetching only applies to sampled streams; observed masks
+decode per step, since the future cannot be pre-observed.
 """
 
 from __future__ import annotations
@@ -743,6 +771,82 @@ def make_assignment(coding: CodingConfig, m: int) -> Assignment:
                      "(expander | frc | uncoded)")
 
 
+def elastic_seed(seed: int, generation: int) -> int:
+    """The seed for elastic generation g of a run seeded ``seed``.
+
+    A pure function of (seed, generation) -- both the elastic
+    re-assignment in a running driver AND a fresh driver launched on
+    the survivors must derive the same seed, or the differential pin
+    (elastic trajectory == fresh-run trajectory) could not hold."""
+    if generation < 0:
+        raise ValueError("generation must be >= 0")
+    return seed + 1_000_003 * generation
+
+
+def elastic_coding(coding: CodingConfig, m_new: int,
+                   generation: int) -> CodingConfig:
+    """The CodingConfig for generation ``generation`` over ``m_new``
+    survivors.
+
+    Scheme divisibility can break when machines die (expander needs
+    d | 2m', FRC d | m'), so the replication degree degrades to the
+    largest feasible d' <= d -- gracefully, the way the sharding
+    rules' divisibility fallback degrades specs -- rather than
+    refusing to continue. Deterministic, so the fresh-run side of the
+    differential pin reconstructs the identical assignment."""
+    if m_new < 1:
+        raise ValueError("need at least one survivor")
+    seed = elastic_seed(coding.seed, generation)
+    if m_new == 1 or (coding.scheme == "expander" and m_new == 2):
+        # A single survivor cannot carry a replicated code, and the
+        # smallest d-regular graph scheme is the 3-edge cycle (two
+        # vertices collapse to a double edge).
+        return dataclasses.replace(coding, scheme="uncoded",
+                                   replication=1, seed=seed)
+    d = min(coding.replication, m_new)
+    if coding.scheme == "expander":
+        # d = 2 (the cycle) always divides 2m', so the loop bottoms
+        # out at a valid graph scheme for m' >= 3.
+        while d > 2 and (2 * m_new) % d:
+            d -= 1
+        d = max(d, 2)
+    elif coding.scheme == "frc":
+        while d > 1 and m_new % d:
+            d -= 1
+    return dataclasses.replace(coding, replication=d, seed=seed)
+
+
+def elastic_reassign(runtime: "CodingRuntime", dead, *,
+                     generation: int,
+                     mask_source: "Optional[sw.MaskSource]" = None
+                     ) -> "CodingRuntime":
+    """Re-draw the code over the survivors after permanent deaths.
+
+    ``dead`` is the dead logical machine ids *of the current runtime*
+    (the driver's SurvivorMap translates original ids). Returns a
+    fresh ``CodingRuntime`` over m' = m - len(dead) machines with the
+    generation-derived seed: new expander assignment, new debias
+    scale, empty decode cache. Training resumes from the live
+    {params, opt_state} -- the block shards remap through the existing
+    ``dist/sharding.block_shardings`` divisibility-fallback rules when
+    the driver rebuilds its jitted step -- and the post-death
+    trajectory is bit-identical to a fresh run launched on the
+    survivors from the same restored state (tests/test_elastic.py).
+    """
+    dead = np.atleast_1d(np.asarray(dead, dtype=np.int64))
+    if np.unique(dead).size != dead.size:
+        raise ValueError("duplicate dead machine ids")
+    if dead.size and (dead.min() < 0 or dead.max() >= runtime.m):
+        raise ValueError(f"dead ids {dead.tolist()} out of range for "
+                         f"m={runtime.m}")
+    m_new = runtime.m - int(dead.size)
+    coding = elastic_coding(runtime.coding, m_new, generation)
+    return CodingRuntime(coding, m_new, debias=runtime.debias,
+                         debias_trials=runtime.debias_trials,
+                         cache_size=runtime.cache_size,
+                         mask_source=mask_source)
+
+
 @dataclasses.dataclass
 class CodingRuntime:
     """Host bridge: assignment + straggler process + per-step weights.
@@ -769,6 +873,7 @@ class CodingRuntime:
     debias: bool = True
     debias_trials: int = 256
     cache_size: int = 4096
+    mask_source: Optional[sw.MaskSource] = None
 
     def __post_init__(self):
         self.assignment = make_assignment(self.coding, self.m)
@@ -776,6 +881,16 @@ class CodingRuntime:
             self.assignment, self.coding.straggler_model,
             self.coding.straggler_p)
         self.rng = np.random.default_rng(self.coding.seed)
+        if self.mask_source is None:
+            # Default: the synthetic simulation path, wrapping this
+            # runtime's own (model, rng) pair so the RNG stream is
+            # bit-identical to the pre-abstraction code.
+            self.mask_source = sw.SampledMaskSource(self.model,
+                                                   self.rng, self.m)
+        elif self.mask_source.m != self.m:
+            raise ValueError(
+                f"mask source is over m={self.mask_source.m} machines, "
+                f"runtime has m={self.m}")
         self.scale = 1.0
         if self.debias and self.coding.decoding == "optimal":
             if self.coding.straggler_model == "adversarial":
@@ -801,23 +916,31 @@ class CodingRuntime:
         self.steps_sampled = 0
 
     def skip(self, rounds: int) -> None:
-        """Fast-forward the straggler stream by ``rounds`` samples
-        without decoding -- the checkpoint-resume path: a restored run
-        calls ``skip(start_step)`` so its subsequent masks (and hence
+        """Fast-forward the mask stream by ``rounds`` rounds without
+        decoding -- the checkpoint-resume path: a restored run calls
+        ``skip(start_step)`` so its subsequent masks (and hence
         weights, via the same memoised decode) are bit-identical to
-        the original run's stream from that step on. Consumes exactly
-        the RNG draws ``step_weights``/``weights_lookahead`` would
-        (and advances stateful models like the Markov chain)."""
+        the original run's stream from that step on. For the sampled
+        source this consumes exactly the RNG draws
+        ``step_weights``/``weights_lookahead`` would (and advances
+        stateful models like the Markov chain); observed sources
+        reject it (re-observe instead of replaying RNG)."""
         if rounds < 0:
             raise ValueError("rounds must be >= 0")
-        for _ in range(rounds):
-            self.model.sample(self.rng)
+        self.mask_source.skip(rounds)
         self.steps_sampled += rounds
 
-    def step_weights(self) -> Tuple[np.ndarray, np.ndarray]:
-        """Sample one round: returns (w (m,) float32, alive (m,) bool)."""
-        alive = self.model.sample(self.rng)
-        self.steps_sampled += 1
+    def weights_for(self, alive: np.ndarray) -> np.ndarray:
+        """Memoised decode of one given (m,) alive mask -> w float32.
+
+        The mask-agnostic half of ``step_weights``: the observed-mask
+        path (heartbeat-derived masks pushed by the driver) and the
+        sampled path share this cache, so stagnant failures hit the
+        memo whether they were sampled or real."""
+        alive = np.asarray(alive, dtype=bool)
+        if alive.shape != (self.m,):
+            raise ValueError(f"mask must be ({self.m},), "
+                             f"got {alive.shape}")
         key = alive.tobytes()
         w = self._cache.get(key)
         if w is None:
@@ -831,7 +954,14 @@ class CodingRuntime:
                 self._cache.pop(next(iter(self._cache)))
             self._cache[key] = w
             self.decode_calls += 1
-        return w, alive
+        return w
+
+    def step_weights(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One round from the mask source: returns (w (m,) float32,
+        alive (m,) bool)."""
+        alive = self.mask_source.next_mask()
+        self.steps_sampled += 1
+        return self.weights_for(alive), alive
 
     def decode_batch(self, masks) -> Tuple[np.ndarray, np.ndarray]:
         """Batched (T, m) masks -> (W, alphas) through the shared
@@ -860,7 +990,7 @@ class CodingRuntime:
         if horizon < 1:
             raise ValueError("horizon must be >= 1")
         alive = np.stack(
-            [self.model.sample(self.rng) for _ in range(horizon)])
+            [self.mask_source.next_mask() for _ in range(horizon)])
         self.steps_sampled += horizon
         keys = [a.tobytes() for a in alive]
         # Gather this horizon's rows locally: FIFO eviction while

@@ -12,13 +12,18 @@ configs and a (4, 2) mesh of virtual devices; on a TPU pod the same
 driver takes the full configs and the production mesh.
 
 The loop is an async pipeline: shardings and the jitted step are built
-once up front (shapes are static across steps), host batch construction
-is double-buffered against device compute on a worker thread, straggler
+once per *generation* (shapes are static until an elastic
+re-assignment changes them), host batch construction is
+double-buffered against device compute on a worker thread, straggler
 masks are pre-sampled and decoded ``--lookahead`` rounds at a time on
-that same worker thread (``coded_train.LookaheadPrefetcher``, one chunk
-ahead of the device), and metrics stay
-on device (alpha-bar included) until a ``--log-every`` boundary -- the
-host never blocks on the device inside the steady-state loop.
+that same worker thread (``coded_train.LookaheadPrefetcher``, one
+chunk ahead of the device), and metrics stay on device (alpha-bar
+included) until a ``--log-every`` boundary -- the host never blocks on
+the device inside the steady-state loop. A failure on the worker
+thread is never swallowed: the pending future re-raises on the main
+loop, queued work is cancelled, and the driver exits with the original
+traceback (tests/test_smoke_train.py injects one via
+``REPRO_FAIL_BATCH_AT``).
 
 Execution path: ``--dedup`` (default) runs every unique block once,
 weighted by v = A @ w (~1x uncoded FLOPs); ``--no-dedup`` materialises
@@ -36,6 +41,19 @@ opt_state so resumes stay bit-identical. ``--fsdp`` shards params and
 Adam moments over the worker axes (``rules.fsdp_specs``) instead of
 replicating them.
 
+``--chaos <spec>`` flips the straggler masks from *sampled* to
+*observed*: a seeded ``dist.chaos.ChaosInjector`` simulates per-step
+per-machine completion timestamps (kills, delays, rack failures,
+flapping -- see ``dist/chaos.py`` for the spec grammar), a
+``dist.failures.HeartbeatMonitor`` derives each round's alive mask by
+deadline, and ``dead_after`` consecutive missed heartbeats trigger an
+elastic re-assignment: the expander is re-drawn over the m-1 survivors
+(``coded_train.elastic_reassign``), block shards remap through the
+sharding rules' divisibility fallback, and training resumes from the
+live {params, opt_state} without a restart. Every detection and
+re-assignment lands in the structured failure-event log (summary
+``chaos`` key; ``--event-log FILE`` writes it as a JSON artifact).
+
   python -m repro.launch.train --arch qwen1.5-4b --steps 20 \
       --straggler-p 0.2 --scheme expander --decoding optimal
 """
@@ -52,8 +70,10 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import CodingConfig, get_config
 from repro.core import compress as compress_mod
+from repro.core import step_weights as sw
 from repro.data.pipeline import CodedBatcher, SyntheticLM
-from repro.dist import coded_train, sharding as rules
+from repro.dist import chaos as chaos_mod
+from repro.dist import coded_train, failures, sharding as rules
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import model as M
 from repro.optim import optimizers as opt_mod
@@ -102,7 +122,8 @@ def main(argv=None) -> dict:
                          "replicating them")
     ap.add_argument("--lookahead", type=int, default=8,
                     help="straggler rounds pre-sampled and decoded per "
-                         "batched decode_batch call")
+                         "batched decode_batch call (ignored under "
+                         "--chaos: observed masks decode per step)")
     ap.add_argument("--log-every", type=int, default=0,
                     help="steps between host metric fetches "
                          "(0: steps // 10)")
@@ -118,6 +139,24 @@ def main(argv=None) -> dict:
                          "end); a later "
                          "run with the same flags and --ckpt-dir "
                          "resumes from the latest step bit-identically")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="inject seeded virtual failures and derive "
+                         "straggler masks from heartbeats instead of "
+                         "sampling them; SPEC is semicolon-separated "
+                         "kill:J@S / rack:J,K@S / delay:J@S-E[:X] / "
+                         "flap:J@S-E[:K] events (dist/chaos.py); a "
+                         "machine declared dead triggers elastic "
+                         "re-assignment over the survivors")
+    ap.add_argument("--dead-after", type=int, default=3,
+                    help="consecutive missed heartbeats before a "
+                         "machine is declared dead (chaos mode)")
+    ap.add_argument("--heartbeat-deadline", type=float, default=0.5,
+                    help="base per-step completion deadline in virtual "
+                         "seconds (chaos mode; exponential backoff "
+                         "widens it per consecutive miss)")
+    ap.add_argument("--event-log", default=None, metavar="FILE",
+                    help="write the structured failure-event log (the "
+                         "summary's chaos object) to FILE as JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.collective == "manual" and args.microbatches != 1:
@@ -135,6 +174,19 @@ def main(argv=None) -> dict:
         ap.error("--stream-chunk requires --collective manual (the "
                  "streaming accumulator replaces the materialised "
                  "manual combine)")
+    if args.chaos:
+        if args.collective != "gspmd" or args.dedup is False:
+            # Elastic re-assignment changes the machine count; only
+            # the dedup path's block axis has the divisibility-fallback
+            # shardings that absorb the new geometry.
+            ap.error("--chaos requires the default gspmd dedup path")
+        if args.ckpt_dir:
+            ap.error("--chaos does not compose with --ckpt-dir: a "
+                     "checkpoint records no failure history, so a "
+                     "resumed chaos run could not replay the observed "
+                     "masks bit-identically")
+    elif args.event_log:
+        ap.error("--event-log only applies under --chaos")
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -154,19 +206,27 @@ def main(argv=None) -> dict:
         scheme=args.scheme, replication=args.replication,
         decoding=args.decoding, straggler_model=args.straggler_model,
         straggler_p=args.straggler_p, seed=args.seed)
-    runtime = coded_train.CodingRuntime(coding, m_workers)
-    assignment = runtime.assignment
-    n_blocks = assignment.n
-    global_batch = n_blocks * args.block_size
+    # Chaos mode swaps the runtime's mask source from sampled to
+    # observed: masks are pushed per step from the heartbeat monitor
+    # instead of drawn from the straggler model.
+    injector = monitor = surv = None
+    if args.chaos:
+        schedule = chaos_mod.parse_chaos_spec(args.chaos, m_workers)
+        injector = chaos_mod.ChaosInjector(schedule, m_workers,
+                                           seed=args.seed)
+        monitor = failures.HeartbeatMonitor(
+            m_workers, deadline=args.heartbeat_deadline,
+            dead_after=args.dead_after)
+        surv = failures.SurvivorMap(m_workers)
+        runtime = coded_train.CodingRuntime(
+            coding, m_workers,
+            mask_source=sw.ObservedMaskSource(m_workers))
+    else:
+        runtime = coded_train.CodingRuntime(coding, m_workers)
     lookahead = max(1, args.lookahead)
     log_every = args.log_every or max(1, args.steps // 10)
 
     source = SyntheticLM(cfg.vocab_size, args.seq_len, seed=args.seed)
-    batcher = CodedBatcher(assignment, shuffle_seed=args.seed)
-    emit = batcher.unique_blocks if dedup else batcher.code_batch
-
-    def host_batch(step: int):
-        return emit(source.batch(global_batch, step))
 
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
@@ -177,7 +237,8 @@ def main(argv=None) -> dict:
     # and the comm-bytes accounting compares the codec's wire payload
     # against the float32 baseline the uncompressed combine ships.
     compress = None if args.compress == "none" else args.compress
-    comp_rows = n_blocks if dedup else m_workers
+    n_blocks0 = runtime.assignment.n
+    comp_rows = n_blocks0 if dedup else m_workers
     comp_state = (compress_mod.init_state(params, comp_rows)
                   if compress else None)
     codec = compress_mod.get_codec(compress) if compress else None
@@ -198,12 +259,13 @@ def main(argv=None) -> dict:
         usable = [s for s in ckpt.saved_steps(args.ckpt_dir)
                   if s <= args.steps]
         if usable:
-            step0 = usable[-1]
             # Ordered templates, newest layout first: compressed runs
             # save {params, opt_state, compress}; uncompressed the
             # composite pair; the original PR saved params only. A
             # mismatched template fails restore's validation and the
-            # next is tried (ckpt.restore_any).
+            # next is tried; a torn file (crash mid-write, truncated
+            # copy) fails np.load and restore_fallback walks back to
+            # the previous intact step instead of wedging the resume.
             templates = []
             if compress:
                 templates.append(("compressed",
@@ -213,8 +275,12 @@ def main(argv=None) -> dict:
             templates += [("composite", {"params": params,
                                          "opt_state": opt_state}),
                           ("params", params)]
-            label, state = ckpt.restore_any(args.ckpt_dir, templates,
-                                            step=step0)
+            step0, label, state = ckpt.restore_fallback(
+                args.ckpt_dir, templates, max_step=args.steps)
+            if step0 != usable[-1]:
+                print(f"checkpoint(s) past step {step0} in "
+                      f"{args.ckpt_dir} are unreadable; fell back to "
+                      f"the newest intact step")
             if label == "params":
                 # Pre-composite (params-only) checkpoint layout: keep
                 # the historical behavior -- warm-start the params and
@@ -252,54 +318,24 @@ def main(argv=None) -> dict:
     repl = rules.replicated(mesh)
     oshard = {"step": repl, "m": pshard, "v": pshard}
 
-    alpha_w = coded_train.alpha_bar_weights(assignment)
-    if args.collective == "manual":
-        train_step = coded_train.make_manual_collective_train_step(
-            cfg, optimizer, mesh, alpha_weights=alpha_w,
-            compress=compress,
-            streaming_chunk=args.stream_chunk or None)
-    else:
-        train_step = coded_train.make_train_step(
-            cfg, optimizer, n_microbatches=args.microbatches,
-            dedup=dedup,
-            norm_scale=coded_train.dedup_norm_scale(assignment),
-            alpha_weights=alpha_w, compress=compress)
+    # Fault-injection hook for the pipeline-hardening regression test:
+    # the batch builder raises at this step (on the worker thread when
+    # it is the double-buffered step), and the driver must die with
+    # that traceback instead of training on or hanging.
+    fail_at = int(os.environ.get("REPRO_FAIL_BATCH_AT", "-1"))
 
-    with mesh, ThreadPoolExecutor(max_workers=1) as pool:
+    pool = ThreadPoolExecutor(max_workers=1)
+    with mesh:
         params = jax.device_put(params, pshard)
         opt_state = jax.device_put(opt_state, oshard)
-        # Shapes are static across steps: build shardings and the
-        # jitted step once, from the first batch this run will
-        # actually consume (step `start` when resuming).
-        batch_np = host_batch(start)
-        bshard = (rules.block_shardings if dedup
-                  else rules.batch_shardings)(mesh, batch_np)
-        if compress:
-            # The residual rows follow the gradient rows: replicated
-            # is fine at smoke scale, and the compressed step's
-            # signature carries the state as a donated third argument.
-            comp_state = jax.device_put(comp_state, repl)
-            step_fn = jax.jit(
-                train_step,
-                in_shardings=(pshard, oshard, repl, bshard, repl),
-                out_shardings=(pshard, oshard, repl, None),
-                donate_argnums=(0, 1, 2))
-        else:
-            step_fn = jax.jit(
-                train_step,
-                in_shardings=(pshard, oshard, bshard, repl),
-                out_shardings=(pshard, oshard, None),
-                donate_argnums=(0, 1))
 
         losses = []
         metrics_hist = []          # device scalars, flushed at logs
-        # Straggler sampling + batched decode run on the same worker
-        # thread as batch building, one chunk ahead of the device
-        # (bit-identical to the old inline calls -- see
-        # LookaheadPrefetcher).
-        lookahead_w = coded_train.LookaheadPrefetcher(
-            runtime, pool, lookahead, args.steps - start)
-        pending = None
+        all_events = []            # chaos: serialized FailureEvents
+        reassignments = []         # chaos: elastic re-draw records
+        generation = 0
+        step = start
+        rebuild_started = None
         t0 = time.time()
 
         def flush_metrics():
@@ -324,40 +360,206 @@ def main(argv=None) -> dict:
             ckpt.save(args.ckpt_dir, state, step=step)
             print(f"saved step-{step} checkpoint to {args.ckpt_dir}")
 
-        for step in range(start, args.steps):
-            if pending is not None:
-                batch_np = pending.result()
-            if step + 1 < args.steps:
-                # Double buffer: the worker thread builds step+1's
-                # batch while the device runs step's compute.
-                pending = pool.submit(host_batch, step + 1)
-            batch = {k: jax.device_put(jnp.asarray(v), bshard[k])
-                     for k, v in batch_np.items()}
-            w, alive = lookahead_w.next()
-            wv = runtime.block_weights(w) if dedup else w
-            wv = jax.device_put(jnp.asarray(wv, jnp.float32), repl)
-            if compress:
-                params, opt_state, comp_state, metrics = step_fn(
-                    params, opt_state, comp_state, batch, wv)
-            else:
-                params, opt_state, metrics = step_fn(params, opt_state,
-                                                     batch, wv)
-            metrics_hist.append(metrics)
-            if step % log_every == 0 or step == args.steps - 1:
-                # The only host<->device syncs in the loop: one bulk
-                # fetch per log interval keeps the metrics buffer
-                # bounded by log_every on arbitrarily long runs.
-                flush_metrics()
-                print(f"step {step:4d} loss {losses[-1]:.4f} "
-                      f"stragglers {int((~alive).sum())}/{m_workers} "
-                      f"({time.time() - t0:.1f}s)")
-            if args.ckpt_dir and args.ckpt_every and \
-                    (step + 1) % args.ckpt_every == 0 and \
-                    step + 1 < args.steps:
-                save_ckpt(step + 1)
-        flush_metrics()
-        if args.ckpt_dir:
-            save_ckpt(args.steps)
+        try:
+            # Generation loop: one iteration per coding geometry. The
+            # per-generation machinery (batcher, shardings, jitted
+            # step) is rebuilt whenever an elastic re-assignment
+            # changes the assignment; without --chaos there is exactly
+            # one generation and this reduces to the classic
+            # build-once-then-loop driver.
+            while step < args.steps:
+                assignment = runtime.assignment
+                n_blocks = assignment.n
+                global_batch = n_blocks * args.block_size
+                batcher = CodedBatcher(assignment,
+                                       shuffle_seed=args.seed)
+                emit = (batcher.unique_blocks if dedup
+                        else batcher.code_batch)
+
+                def host_batch(s, _emit=emit, _gb=global_batch):
+                    if s == fail_at:
+                        raise RuntimeError(
+                            f"injected batch failure at step {s} "
+                            "(REPRO_FAIL_BATCH_AT)")
+                    return _emit(source.batch(_gb, s))
+
+                alpha_w = coded_train.alpha_bar_weights(assignment)
+                if args.collective == "manual":
+                    train_step = \
+                        coded_train.make_manual_collective_train_step(
+                            cfg, optimizer, mesh, alpha_weights=alpha_w,
+                            compress=compress,
+                            streaming_chunk=args.stream_chunk or None)
+                else:
+                    train_step = coded_train.make_train_step(
+                        cfg, optimizer,
+                        n_microbatches=args.microbatches,
+                        dedup=dedup,
+                        norm_scale=coded_train.dedup_norm_scale(
+                            assignment),
+                        alpha_weights=alpha_w, compress=compress)
+
+                # Shapes are static within a generation: build
+                # shardings and the jitted step once, from the first
+                # batch this generation will actually consume.
+                batch_np = host_batch(step)
+                bshard = (rules.block_shardings if dedup
+                          else rules.batch_shardings)(mesh, batch_np)
+                if compress:
+                    if generation > 0:
+                        # The residual rows track the block axis, which
+                        # the re-assignment re-drew: restart error
+                        # feedback from a zero residual.
+                        comp_state = compress_mod.init_state(
+                            params, n_blocks if dedup else runtime.m)
+                    # Replicated is fine at smoke scale, and the
+                    # compressed step's signature carries the state as
+                    # a donated third argument.
+                    comp_state = jax.device_put(comp_state, repl)
+                    step_fn = jax.jit(
+                        train_step,
+                        in_shardings=(pshard, oshard, repl, bshard,
+                                      repl),
+                        out_shardings=(pshard, oshard, repl, None),
+                        donate_argnums=(0, 1, 2))
+                else:
+                    step_fn = jax.jit(
+                        train_step,
+                        in_shardings=(pshard, oshard, bshard, repl),
+                        out_shardings=(pshard, oshard, None),
+                        donate_argnums=(0, 1))
+                if rebuild_started is not None:
+                    reassignments[-1]["rebuild_s"] = round(
+                        time.time() - rebuild_started, 3)
+                    rebuild_started = None
+
+                # Straggler sampling + batched decode run on the same
+                # worker thread as batch building, one chunk ahead of
+                # the device (bit-identical to inline calls -- see
+                # LookaheadPrefetcher). Observed masks (chaos) decode
+                # per step instead: the mask is not knowable ahead of
+                # the heartbeats.
+                lookahead_w = None
+                if not args.chaos:
+                    lookahead_w = coded_train.LookaheadPrefetcher(
+                        runtime, pool, lookahead, args.steps - step)
+                pending = None
+                reassign_dead = None
+
+                while step < args.steps:
+                    if pending is not None:
+                        # Re-raises any worker-thread exception here,
+                        # on the main loop, with its traceback.
+                        batch_np = pending.result()
+                    if step + 1 < args.steps:
+                        # Double buffer: the worker thread builds
+                        # step+1's batch while the device runs step's
+                        # compute.
+                        pending = pool.submit(host_batch, step + 1)
+                    batch = {k: jax.device_put(jnp.asarray(v),
+                                               bshard[k])
+                             for k, v in batch_np.items()}
+                    if args.chaos:
+                        times = injector.completion_times(step)
+                        observed = monitor.observe(step, times)
+                        runtime.mask_source.push(
+                            surv.localize(observed))
+                        w, alive = runtime.step_weights()
+                    else:
+                        w, alive = lookahead_w.next()
+                    wv = runtime.block_weights(w) if dedup else w
+                    wv = jax.device_put(jnp.asarray(wv, jnp.float32),
+                                        repl)
+                    if compress:
+                        params, opt_state, comp_state, metrics = \
+                            step_fn(params, opt_state, comp_state,
+                                    batch, wv)
+                    else:
+                        params, opt_state, metrics = step_fn(
+                            params, opt_state, batch, wv)
+                    metrics_hist.append(metrics)
+                    if step % log_every == 0 or \
+                            step == args.steps - 1:
+                        # The only host<->device syncs in the loop:
+                        # one bulk fetch per log interval keeps the
+                        # metrics buffer bounded by log_every on
+                        # arbitrarily long runs.
+                        flush_metrics()
+                        print(f"step {step:4d} loss "
+                              f"{losses[-1]:.4f} stragglers "
+                              f"{int((~alive).sum())}/{runtime.m} "
+                              f"({time.time() - t0:.1f}s)")
+                    if args.ckpt_dir and args.ckpt_every and \
+                            (step + 1) % args.ckpt_every == 0 and \
+                            step + 1 < args.steps:
+                        save_ckpt(step + 1)
+                    step += 1
+                    if args.chaos:
+                        new_events = monitor.drain_events()
+                        for ev in new_events:
+                            all_events.append(ev.to_json())
+                            print(f"step {ev.step}: machine "
+                                  f"{ev.machine} {ev.kind} "
+                                  f"{ev.detail}")
+                        dead_new = [ev.machine for ev in new_events
+                                    if ev.kind == "dead"]
+                        if dead_new:
+                            reassign_dead = dead_new
+                            break
+
+                if reassign_dead:
+                    # Elastic re-assignment: re-draw the code over the
+                    # survivors and rebuild the generation machinery;
+                    # {params, opt_state} stay live on device. The
+                    # step where death was declared already decoded
+                    # around the dead machine (a miss zeroes its
+                    # weight), so no step is recomputed.
+                    if surv.alive_count - len(reassign_dead) < 1:
+                        raise SystemExit(
+                            f"step {step}: all machines dead, cannot "
+                            "re-assign")
+                    flush_metrics()
+                    rebuild_started = time.time()
+                    local = [int(np.where(surv.survivors == d)[0][0])
+                             for d in reassign_dead]
+                    surv.remove(reassign_dead)
+                    generation += 1
+                    runtime = coded_train.elastic_reassign(
+                        runtime, local, generation=generation,
+                        mask_source=sw.ObservedMaskSource(
+                            surv.alive_count))
+                    pending = None  # old-geometry batch: discard
+                    info = {"step": int(step),
+                            "generation": int(generation),
+                            "dead": [int(d) for d in reassign_dead],
+                            "survivors": surv.survivors.tolist(),
+                            "m": surv.alive_count,
+                            "scheme": runtime.coding.scheme,
+                            "replication":
+                                int(runtime.coding.replication),
+                            "n_blocks": int(runtime.assignment.n),
+                            "rebuild_s": None}
+                    reassignments.append(info)
+                    all_events.append(
+                        {"step": int(step), "kind": "reassign",
+                         "machine": -1,
+                         "detail": {k: v for k, v in info.items()
+                                    if k != "step"}})
+                    print(f"step {step}: elastic re-assignment over "
+                          f"m={surv.alive_count} survivors "
+                          f"(generation {generation}, d="
+                          f"{runtime.coding.replication})")
+
+            flush_metrics()
+            if args.ckpt_dir:
+                save_ckpt(args.steps)
+        finally:
+            # Pipeline hardening: whatever killed the loop (injected
+            # batch failure, jit error, KeyboardInterrupt), cancel the
+            # queued worker tasks and join the in-flight one so the
+            # driver exits promptly with the original traceback
+            # instead of idling behind orphaned host work.
+            pool.shutdown(wait=True, cancel_futures=True)
     # The per-step coded loss is scaled by the straggler draw (w* varies
     # step to step), so compare window means, not endpoints. A resumed
     # run only sees its own (possibly short) tail of the stream, so the
@@ -367,20 +569,40 @@ def main(argv=None) -> dict:
         first, last = np.mean(losses[:k]), np.mean(losses[-k:])
         assert last < first, \
             f"loss did not decrease ({first:.3f}->{last:.3f})"
-    print(json.dumps({"first_loss": losses[0] if losses else None,
-                      "last_loss": losses[-1] if losses else None,
-                      "losses": losses, "start_step": start,
-                      "steps": args.steps, "m_workers": m_workers,
-                      "scheme": args.scheme, "decoding": args.decoding,
-                      "path": "dedup" if dedup else "replicated",
-                      "collective": args.collective,
-                      "compress": args.compress,
-                      "stream_chunk": args.stream_chunk,
-                      "fsdp": bool(args.fsdp),
-                      "comm_bytes_per_step": comm_bytes,
-                      "comm_bytes_per_step_float32": comm_bytes_f32,
-                      "decode_calls": runtime.decode_calls}))
-    return {"losses": losses}
+    chaos_summary = None
+    if args.chaos:
+        detect = monitor.steps_to_detect()
+        chaos_summary = {
+            "spec": args.chaos,
+            "events": all_events,
+            "reassignments": reassignments,
+            "dead_machines": monitor.dead_machines.tolist(),
+            "steps_to_detect": {str(k): int(v)
+                                for k, v in detect.items()},
+            "degraded_steps": int(sum(detect.values())),
+            "m_final": surv.alive_count,
+            "generations": generation + 1,
+        }
+        if args.event_log:
+            with open(args.event_log, "w") as f:
+                json.dump(chaos_summary, f, indent=1)
+            print(f"wrote failure-event log to {args.event_log}")
+    summary = {"first_loss": losses[0] if losses else None,
+               "last_loss": losses[-1] if losses else None,
+               "losses": losses, "start_step": start,
+               "steps": args.steps, "m_workers": m_workers,
+               "scheme": args.scheme, "decoding": args.decoding,
+               "path": "dedup" if dedup else "replicated",
+               "collective": args.collective,
+               "compress": args.compress,
+               "stream_chunk": args.stream_chunk,
+               "fsdp": bool(args.fsdp),
+               "comm_bytes_per_step": comm_bytes,
+               "comm_bytes_per_step_float32": comm_bytes_f32,
+               "decode_calls": runtime.decode_calls,
+               "chaos": chaos_summary}
+    print(json.dumps(summary))
+    return summary
 
 
 if __name__ == "__main__":

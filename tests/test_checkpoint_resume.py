@@ -75,6 +75,67 @@ def test_resume_is_bit_identical(tmp_path):
     assert capped["losses"] == []
 
 
+def _truncate(path, keep=0.5):
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[:int(len(blob) * keep)])
+
+
+def test_restore_fallback_skips_torn_checkpoint(tmp_path):
+    """Unit contract of ckpt.restore_fallback: a truncated .npz (crash
+    mid-write survives the atomic rename only if the tear happens at
+    copy/disk level -- but it can) must fall back to the previous
+    intact step, and raise only when nothing intact remains."""
+    import numpy as np
+
+    import repro.checkpoint.checkpoint as ckpt
+
+    tree2 = {"w": np.arange(4, dtype=np.float32)}
+    tree4 = {"w": np.arange(4, dtype=np.float32) * 2}
+    ck = str(tmp_path / "ck")
+    ckpt.save(ck, tree2, step=2)
+    ckpt.save(ck, tree4, step=4)
+    templates = [("t", {"w": np.zeros(4, dtype=np.float32)})]
+
+    step, label, state = ckpt.restore_fallback(ck, templates)
+    assert step == 4
+    np.testing.assert_array_equal(state["w"], tree4["w"])
+
+    _truncate(f"{ck}/ckpt_00000004.npz")
+    step, label, state = ckpt.restore_fallback(ck, templates)
+    assert step == 2, "torn step-4 file must fall back to step 2"
+    np.testing.assert_array_equal(state["w"], tree2["w"])
+
+    _truncate(f"{ck}/ckpt_00000002.npz", keep=0.1)
+    try:
+        ckpt.restore_fallback(ck, templates)
+        raise AssertionError("all-torn directory must raise")
+    except ValueError as e:
+        assert "no intact checkpoint" in str(e)
+
+
+def test_driver_resumes_past_torn_checkpoint(tmp_path):
+    """Driver-level crash-safety: with the newest checkpoint file
+    truncated mid-zip, the resume falls back to the previous intact
+    step and the loss stream stays bitwise the uninterrupted run's
+    tail from there."""
+    full = _run_driver("--steps", str(STEPS), "--dedup",
+                       "--lookahead", "3")
+    ck = str(tmp_path / "ck")
+    _run_driver("--steps", str(MID), "--dedup", "--lookahead", "3",
+                "--ckpt-dir", ck, "--ckpt-every", str(EVERY))
+    _truncate(os.path.join(ck, f"ckpt_{MID:08d}.npz"))
+
+    resumed = _run_driver("--steps", str(STEPS), "--dedup",
+                          "--lookahead", "3", "--ckpt-dir", ck)
+    assert resumed["start_step"] == EVERY, \
+        "torn newest checkpoint must fall back to the intact step 4"
+    assert resumed["losses"] == full["losses"][EVERY:], (
+        f"fallback resume diverged:\n{resumed['losses']}\nvs\n"
+        f"{full['losses'][EVERY:]}")
+
+
 def test_compressed_resume_is_bit_identical(tmp_path):
     """--compress int8 threads the error-feedback residual through the
     checkpoint: a resumed compressed run replays the loss stream

@@ -177,6 +177,29 @@ def test_lookahead_prefetcher_rejects_bad_horizon():
         coded_train.LookaheadPrefetcher(_runtime(), None, 0, 10)
 
 
+def test_lookahead_prefetcher_propagates_worker_exception():
+    """Thread-death hardening: an exception inside the prefetch task
+    (here: a mask source that dies mid-stream) must re-raise on the
+    consumer's next(), not strand the driver with a silently dead
+    worker. The driver-level version (batch-builder thread) lives in
+    tests/test_smoke_train.py."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    masks = np.ones((3, M_WORKERS), dtype=bool)
+    rt = coded_train.CodingRuntime(
+        CodingConfig(scheme="expander", replication=2), m=M_WORKERS,
+        mask_source=sw.ReplayedMaskSource(masks))
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        pre = coded_train.LookaheadPrefetcher(rt, pool, 2, 10)
+        pre.next()
+        pre.next()
+        # The worker's decode of the next chunk exhausts the replayed
+        # stream on the worker thread; the failure must surface here.
+        with pytest.raises(RuntimeError, match="exhausted"):
+            for _ in range(8):
+                pre.next()
+
+
 def test_block_weights_scalar_and_batched():
     A = expander_assignment(M_WORKERS, 2, vertex_transitive=True, seed=0)
     rng = np.random.default_rng(3)

@@ -1,0 +1,229 @@
+"""Elastic re-assignment differential pins.
+
+The robustness rung of the repo's differential-testing convention: an
+elastic re-assignment mid-run (re-draw the code over the survivors,
+keep the live {params, opt_state}) must be **bit-identical** to a
+fresh run launched on the survivors from the same state. Both sides
+derive the generation coding through the same pure function
+(``elastic_coding``: generation-derived seed, deterministic
+replication degradation), data batches are a pure function of the step
+index, and the replayed mask stream is shared -- so every device input
+matches bitwise and the trajectories cannot diverge.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.step_weights as sw
+from repro.configs import CodingConfig, get_config
+from repro.data.pipeline import CodedBatcher, SyntheticLM
+from repro.dist import coded_train
+from repro.models import model as M
+from repro.optim import optimizers as opt_mod
+
+
+def _coding(**kw):
+    kw.setdefault("scheme", "expander")
+    kw.setdefault("replication", 2)
+    kw.setdefault("seed", 0)
+    return CodingConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# elastic_seed / elastic_coding
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_seed_pure_and_distinct():
+    assert coded_train.elastic_seed(7, 0) == 7
+    assert coded_train.elastic_seed(7, 1) == \
+        coded_train.elastic_seed(7, 1)
+    seeds = {coded_train.elastic_seed(7, g) for g in range(5)}
+    assert len(seeds) == 5
+    with pytest.raises(ValueError):
+        coded_train.elastic_seed(7, -1)
+
+
+def test_elastic_coding_keeps_feasible_replication():
+    base = _coding(replication=4)
+    # 2m' = 12: d = 4 still divides -> kept.
+    assert coded_train.elastic_coding(base, 6, 1).replication == 4
+    # 2m' = 10: 4 and 3 do not divide -> degrade to the cycle d = 2.
+    assert coded_train.elastic_coding(base, 5, 1).replication == 2
+    # FRC needs d | m'.
+    frc = _coding(scheme="frc", replication=2)
+    assert coded_train.elastic_coding(frc, 6, 1).replication == 2
+    assert coded_train.elastic_coding(frc, 5, 1).replication == 1
+    # A single survivor degenerates to uncoded.
+    solo = coded_train.elastic_coding(base, 1, 2)
+    assert solo.scheme == "uncoded" and solo.replication == 1
+    with pytest.raises(ValueError):
+        coded_train.elastic_coding(base, 0, 1)
+
+
+def test_elastic_coding_seed_follows_generation():
+    base = _coding(seed=3)
+    g2 = coded_train.elastic_coding(base, 5, 2)
+    assert g2.seed == coded_train.elastic_seed(3, 2)
+    # Deterministic: same inputs, same config.
+    assert g2 == coded_train.elastic_coding(base, 5, 2)
+
+
+# ---------------------------------------------------------------------------
+# elastic_reassign
+# ---------------------------------------------------------------------------
+
+
+def test_reassign_matches_fresh_runtime_exactly():
+    """The heart of the differential pin: the re-assigned runtime and
+    a freshly constructed survivors' runtime agree on the assignment
+    matrix, debias scale, and decode weights for every mask."""
+    rt0 = coded_train.CodingRuntime(_coding(), 6)
+    rt1 = coded_train.elastic_reassign(rt0, [2], generation=1)
+    fresh = coded_train.CodingRuntime(
+        coded_train.elastic_coding(rt0.coding, 5, 1), 5)
+    assert rt1.m == fresh.m == 5
+    np.testing.assert_array_equal(rt1.assignment.A, fresh.assignment.A)
+    assert rt1.scale == fresh.scale
+    rng = np.random.default_rng(9)
+    for _ in range(6):
+        mask = rng.random(5) > 0.3
+        np.testing.assert_array_equal(rt1.weights_for(mask),
+                                      fresh.weights_for(mask))
+
+
+def test_reassign_chains_across_generations():
+    rt0 = coded_train.CodingRuntime(_coding(), 6)
+    rt1 = coded_train.elastic_reassign(rt0, [0], generation=1)
+    rt2 = coded_train.elastic_reassign(rt1, [3], generation=2)
+    assert rt2.m == 4
+    # Generation 2 derives from generation 1's coding -- the same
+    # chain a fresh run walking the recorded reassignment history
+    # would reconstruct.
+    expect = coded_train.elastic_coding(rt1.coding, 4, 2)
+    assert rt2.coding == expect
+
+
+def test_reassign_validates_dead_ids():
+    rt0 = coded_train.CodingRuntime(_coding(), 4)
+    with pytest.raises(ValueError):
+        coded_train.elastic_reassign(rt0, [1, 1], generation=1)
+    with pytest.raises(ValueError):
+        coded_train.elastic_reassign(rt0, [4], generation=1)
+    with pytest.raises(ValueError):
+        coded_train.elastic_reassign(rt0, [-1], generation=1)
+
+
+def test_reassign_carries_mask_source():
+    rt0 = coded_train.CodingRuntime(_coding(), 4)
+    obs = sw.ObservedMaskSource(3)
+    rt1 = coded_train.elastic_reassign(rt0, [1], generation=1,
+                                       mask_source=obs)
+    assert rt1.mask_source is obs
+    with pytest.raises(ValueError):
+        # Source sized for the wrong survivor count.
+        coded_train.elastic_reassign(rt0, [1], generation=1,
+                                     mask_source=sw.ObservedMaskSource(4))
+
+
+# ---------------------------------------------------------------------------
+# Trajectory pin: elastic continuation == fresh run on survivors
+# ---------------------------------------------------------------------------
+
+
+def _run_steps(cfg, opt, runtime, src, params, opt_state, start, steps,
+               bs=2):
+    """A miniature of the train driver's per-generation loop: dedup
+    path, jitted step, masks from the runtime's source."""
+    A = runtime.assignment
+    batcher = CodedBatcher(A, shuffle_seed=0)
+    step_fn = jax.jit(coded_train.make_train_step(
+        cfg, opt, dedup=True,
+        norm_scale=coded_train.dedup_norm_scale(A),
+        alpha_weights=coded_train.alpha_bar_weights(A)))
+    losses = []
+    for step in range(start, start + steps):
+        raw = src.batch(A.n * bs, step)
+        blocks = {k: jnp.asarray(v)
+                  for k, v in batcher.unique_blocks(raw).items()}
+        w, _ = runtime.step_weights()
+        v = runtime.block_weights(w)
+        params, opt_state, met = step_fn(
+            params, opt_state, blocks, jnp.asarray(v, jnp.float32))
+        losses.append(float(met["loss"]))
+    return params, opt_state, losses
+
+
+def _tree_bit_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_elastic_trajectory_bit_identical_to_fresh_run():
+    cfg = get_config("granite-3-8b").smoke_variant()
+    coding = _coding(seed=0)
+    opt = opt_mod.get_optimizer("adamw", 1e-3)
+    src = SyntheticLM(cfg.vocab_size, 16, seed=0)
+    rng = np.random.default_rng(11)
+    masks0 = rng.random((3, 4)) > 0.2          # generation 0, m = 4
+    masks1 = rng.random((3, 3)) > 0.2          # generation 1, m' = 3
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+
+    # Elastic side: 3 steps on m = 4, machine 1 dies, re-assign,
+    # 3 more steps on the survivors.
+    rt0 = coded_train.CodingRuntime(
+        coding, 4, mask_source=sw.ReplayedMaskSource(masks0))
+    p_mid, o_mid, _ = _run_steps(cfg, opt, rt0, src, params, opt_state,
+                                 start=0, steps=3)
+    # Host snapshot of the mid-run state: the "same state" both the
+    # elastic continuation and the fresh run resume from.
+    p_mid = jax.device_get(p_mid)
+    o_mid = jax.device_get(o_mid)
+    rt1 = coded_train.elastic_reassign(
+        rt0, [1], generation=1,
+        mask_source=sw.ReplayedMaskSource(masks1))
+    p_el, o_el, l_el = _run_steps(cfg, opt, rt1, src, p_mid, o_mid,
+                                  start=3, steps=3)
+
+    # Fresh side: a brand-new driver launched on the 3 survivors with
+    # the same {params, opt_state} and the same observed mask stream,
+    # deriving its coding through the same pure generation function.
+    rt_fresh = coded_train.CodingRuntime(
+        coded_train.elastic_coding(coding, 3, 1), 3,
+        mask_source=sw.ReplayedMaskSource(masks1))
+    p_fr, o_fr, l_fr = _run_steps(cfg, opt, rt_fresh, src, p_mid,
+                                  o_mid, start=3, steps=3)
+
+    assert l_el == l_fr
+    _tree_bit_equal(p_el, p_fr)
+    _tree_bit_equal(o_el, o_fr)
+
+
+def test_elastic_uncoded_degeneration_still_trains():
+    """Shrinking an expander below the 3-edge cycle (m' <= 2) flips to
+    the uncoded scheme; the runtime must still produce usable
+    weights."""
+    rt0 = coded_train.CodingRuntime(_coding(), 3)
+    rt1 = coded_train.elastic_reassign(rt0, [0], generation=1)
+    assert rt1.m == 2 and rt1.coding.scheme == "uncoded"
+    w = rt1.weights_for(np.array([True, True]))
+    assert w.shape == (2,) and np.isfinite(w).all()
+    rt2 = coded_train.elastic_reassign(rt1, [1], generation=2)
+    assert rt2.m == 1 and rt2.coding.scheme == "uncoded"
+    w = rt2.weights_for(np.array([True]))
+    assert w.shape == (1,) and np.isfinite(w).all()
+
+
+def test_elastic_coding_is_frozen_replace():
+    """elastic_coding must not mutate the base config (frozen
+    dataclass replace) -- generation 0 stays reconstructible."""
+    base = _coding(seed=4)
+    before = dataclasses.asdict(base)
+    coded_train.elastic_coding(base, 3, 1)
+    assert dataclasses.asdict(base) == before

@@ -1,0 +1,335 @@
+"""Failure-detection unit layer: heartbeat monitor semantics, chaos
+spec parsing / injection determinism, mask-source protocol, and the
+straggler-model edge cases the elastic path can reach (all-straggling
+draws, budgets past the survivor count, permanently dead machines).
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.step_weights as sw
+from repro.configs import CodingConfig
+from repro.core.stragglers import (AdversarialStragglers,
+                                   FixedCountStragglers)
+from repro.dist import chaos, coded_train, failures
+
+
+def _monitor(**kw):
+    kw.setdefault("deadline", 1.0)
+    kw.setdefault("dead_after", 3)
+    return failures.HeartbeatMonitor(4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_all_on_time_all_alive_no_events():
+    mon = _monitor()
+    for step in range(5):
+        alive = mon.observe(step, np.full(4, 0.5))
+        assert alive.all()
+    assert mon.events == []
+    assert mon.steps_to_detect() == {}
+
+
+def test_miss_is_excluded_immediately_even_within_grace():
+    """Grace delays the straggle *event*, never the mask: a machine
+    that missed its deadline contributed no gradient this round."""
+    mon = _monitor(grace=2)
+    times = np.full(4, 0.5)
+    times[2] = np.inf
+    alive = mon.observe(0, times)
+    assert not alive[2] and alive[[0, 1, 3]].all()
+    # Within grace: no event yet.
+    assert mon.drain_events() == []
+
+
+def test_straggle_event_after_grace_and_backoff_widens_deadline():
+    mon = _monitor(grace=1, backoff=2.0, max_backoff=4, dead_after=10)
+    times = np.full(4, 0.5)
+    times[1] = 5.0                      # late, not absent
+    assert mon.current_deadline(1) == 1.0
+    mon.observe(0, times)               # miss 1: in grace, no event
+    assert mon.drain_events() == []
+    assert mon.current_deadline(1) == 2.0   # backoff doubled
+    mon.observe(1, times)               # miss 2: straggle event
+    ev = mon.drain_events()
+    assert [e.kind for e in ev] == ["straggle"]
+    assert ev[0].machine == 1 and ev[0].detail["since_step"] == 0
+    assert mon.current_deadline(1) == 4.0
+    gone = times.copy()
+    gone[1] = np.inf
+    for step in range(2, 8):
+        mon.observe(step, gone)
+    # Cap: at most max_backoff doublings.
+    assert mon.current_deadline(1) == 1.0 * 2.0 ** 4
+    # A late-but-under-widened-deadline report is on time again.
+    alive = mon.observe(8, times)
+    assert alive[1]
+    assert [e.kind for e in mon.drain_events()] == ["recover"]
+    assert mon.current_deadline(1) == 1.0
+
+
+def test_dead_after_k_consecutive_misses_and_stays_dead():
+    mon = _monitor(dead_after=3)
+    dead_t = np.full(4, 0.5)
+    dead_t[0] = np.nan                  # nan == no heartbeat
+    for step in range(3):
+        alive = mon.observe(step, dead_t)
+        assert not alive[0]
+    kinds = [e.kind for e in mon.events]
+    assert kinds == ["straggle", "dead"]
+    assert mon.is_dead(0)
+    assert mon.dead_machines.tolist() == [0]
+    assert mon.steps_to_detect() == {0: 3}
+    # A zombie heartbeat is ignored: dead is permanent.
+    alive = mon.observe(3, np.full(4, 0.1))
+    assert not alive[0] and alive[1:].all()
+    assert [e.kind for e in mon.drain_events()] == \
+        ["straggle", "dead"]
+
+
+def test_recovery_interrupts_death_countdown():
+    mon = _monitor(dead_after=3)
+    miss = np.full(4, 0.5)
+    miss[2] = np.inf
+    mon.observe(0, miss)
+    mon.observe(1, miss)
+    mon.observe(2, np.full(4, 0.5))     # back under deadline
+    mon.observe(3, miss)
+    mon.observe(4, miss)
+    assert not mon.is_dead(2)           # never 3 consecutive
+
+
+def test_monitor_validation():
+    with pytest.raises(ValueError):
+        failures.HeartbeatMonitor(0)
+    with pytest.raises(ValueError):
+        failures.HeartbeatMonitor(4, deadline=0.0)
+    with pytest.raises(ValueError):
+        failures.HeartbeatMonitor(4, backoff=0.5)
+    mon = _monitor()
+    with pytest.raises(ValueError):
+        mon.observe(0, np.zeros(3))
+
+
+def test_events_serialize_to_plain_json_types():
+    mon = _monitor(grace=0, dead_after=2)
+    t = np.full(4, 0.5)
+    t[3] = np.inf
+    mon.observe(0, t)
+    mon.observe(1, t)
+    out = failures.events_to_json(mon.events)
+    assert [e["kind"] for e in out] == ["straggle", "dead"]
+    for e in out:
+        assert isinstance(e["step"], int)
+        assert isinstance(e["machine"], int)
+        assert all(not isinstance(v, np.generic)
+                   for v in e["detail"].values())
+
+
+# ---------------------------------------------------------------------------
+# SurvivorMap
+# ---------------------------------------------------------------------------
+
+
+def test_survivor_map_remove_and_localize():
+    surv = failures.SurvivorMap(5)
+    assert surv.alive_count == 5
+    surv.remove([1, 3])
+    assert surv.survivors.tolist() == [0, 2, 4]
+    mask = np.array([True, False, False, True, True])
+    assert surv.localize(mask).tolist() == [True, False, True]
+    with pytest.raises(ValueError):
+        surv.remove([1])                # already gone
+    with pytest.raises(ValueError):
+        surv.localize(np.ones(3, dtype=bool))  # original-m shape only
+
+
+# ---------------------------------------------------------------------------
+# Chaos spec + injector
+# ---------------------------------------------------------------------------
+
+
+def test_parse_chaos_spec_grammar():
+    evs = chaos.parse_chaos_spec(
+        "kill:1@3; rack:0,2@5; delay:3@4-8:20; flap:2@6-12:2", m=4)
+    assert [e.kind for e in evs] == ["kill", "rack", "delay", "flap"]
+    assert evs[0].machines == (1,) and evs[0].start == 3
+    assert evs[0].end is None and evs[0].active(99)
+    assert evs[1].machines == (0, 2)
+    assert evs[2].magnitude == 20.0
+    assert evs[2].active(4) and not evs[2].active(8)  # end exclusive
+    assert evs[3].magnitude == 2.0
+    # Defaults: delay x10, flap period 1.
+    d, f = chaos.parse_chaos_spec("delay:0@1-2;flap:1@1-3", m=2)
+    assert d.magnitude == 10.0 and f.magnitude == 1.0
+
+
+@pytest.mark.parametrize("bad", [
+    "explode:1@3",            # unknown kind
+    "kill:9@3",               # machine out of range
+    "delay:0@5-5",            # empty window
+    "kill:x@3",               # non-integer machine
+])
+def test_parse_chaos_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        chaos.parse_chaos_spec(bad, m=4)
+
+
+def test_injector_deterministic_and_fault_shapes():
+    sched = chaos.parse_chaos_spec("kill:1@2;delay:2@3-5:10;flap:0@2-6",
+                                   m=4)
+    a = chaos.ChaosInjector(sched, 4, seed=7)
+    b = chaos.ChaosInjector(sched, 4, seed=7)
+    for step in range(8):
+        np.testing.assert_array_equal(a.completion_times(step),
+                                      b.completion_times(step))
+    c = chaos.ChaosInjector(sched, 4, seed=7)
+    healthy_hi = c.base_time * (1 + c.jitter)
+    for step in range(8):
+        t = c.completion_times(step)
+        assert np.isinf(t[1]) == (step >= 2)          # kill
+        if 3 <= step < 5:                             # delay window
+            assert t[2] > healthy_hi
+        else:
+            assert t[2] <= healthy_hi
+        if 2 <= step < 6:                             # flap: 1-step
+            dark = (step - 2) % 2 == 0                # alternation
+            assert np.isinf(t[0]) == dark
+        assert np.isfinite(t[3]) and t[3] <= healthy_hi
+    np.testing.assert_array_equal(c.killed(1), [0, 0, 0, 0])
+    np.testing.assert_array_equal(c.killed(2), [0, 1, 0, 0])
+
+
+def test_random_schedule_stays_in_bounds():
+    evs = chaos.random_schedule(6, 20, seed=3, n_events=4)
+    assert len(evs) == 4
+    assert sum(e.kind == "kill" for e in evs) <= 1
+    for e in evs:
+        assert all(0 <= j < 6 for j in e.machines)
+        assert 0 <= e.start < 20
+        if e.end is not None:
+            assert e.start < e.end <= 20
+
+
+def test_injector_feeds_monitor_end_to_end():
+    """The composed loop: injected kill -> missed heartbeats ->
+    straggle -> dead, with detection latency == dead_after."""
+    sched = chaos.parse_chaos_spec("kill:2@4", m=4)
+    inj = chaos.ChaosInjector(sched, 4, seed=0)
+    mon = failures.HeartbeatMonitor(4, deadline=0.5, dead_after=3)
+    for step in range(10):
+        mon.observe(step, inj.completion_times(step))
+    assert mon.dead_machines.tolist() == [2]
+    assert mon.steps_to_detect() == {2: 3}
+    assert mon.dead_at[2] == 6          # kill@4 + 3 misses - 1
+
+
+# ---------------------------------------------------------------------------
+# Mask sources
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_source_matches_direct_model_stream():
+    cfg = CodingConfig(scheme="expander", replication=2, seed=5)
+    rt = coded_train.CodingRuntime(cfg, 6)
+    model = coded_train.CodingRuntime(cfg, 6).model
+    rng = np.random.default_rng(cfg.seed)
+    for _ in range(8):
+        np.testing.assert_array_equal(rt.mask_source.next_mask(),
+                                      model.sample(rng))
+
+
+def test_replayed_source_order_skip_and_exhaustion():
+    masks = np.array([[1, 0], [0, 1], [1, 1]], dtype=bool)
+    src = sw.ReplayedMaskSource(masks)
+    assert src.next_mask().tolist() == [True, False]
+    src.skip(1)
+    assert src.next_mask().tolist() == [True, True]
+    with pytest.raises(RuntimeError):
+        src.next_mask()
+    with pytest.raises(RuntimeError):
+        sw.ReplayedMaskSource(masks).skip(4)
+
+
+def test_observed_source_fifo_and_errors():
+    src = sw.ObservedMaskSource(3)
+    src.push(np.array([True, False, True]))
+    src.push(np.array([False, True, True]))
+    assert src.next_mask().tolist() == [True, False, True]
+    assert src.next_mask().tolist() == [False, True, True]
+    with pytest.raises(RuntimeError):
+        src.next_mask()                 # nothing observed yet
+    with pytest.raises(RuntimeError):
+        src.skip(1)                     # cannot fast-forward reality
+    with pytest.raises(ValueError):
+        src.push(np.ones(4, dtype=bool))
+
+
+def test_runtime_rejects_mismatched_mask_source():
+    cfg = CodingConfig(scheme="expander", replication=2)
+    with pytest.raises(ValueError):
+        coded_train.CodingRuntime(cfg, 4,
+                                  mask_source=sw.ObservedMaskSource(5))
+
+
+def test_runtime_weights_from_observed_masks():
+    cfg = CodingConfig(scheme="expander", replication=2, seed=0)
+    rt = coded_train.CodingRuntime(
+        cfg, 4, mask_source=sw.ObservedMaskSource(4))
+    alive_in = np.array([True, False, True, True])
+    rt.mask_source.push(alive_in)
+    w, alive = rt.step_weights()
+    np.testing.assert_array_equal(alive, alive_in)
+    assert w.shape == (4,) and w[1] == 0.0
+    assert np.isfinite(w).all() and w[alive_in].sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Straggler-model edge cases (satellite: elastic-shrink extremes)
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_count_all_straggling_and_over_budget():
+    rng = np.random.default_rng(0)
+    assert not FixedCountStragglers(4, 1.0).sample(rng).any()
+    # p > 1 must clamp to all-dead, not raise from an oversized draw.
+    assert not FixedCountStragglers(4, 1.5).sample(rng).any()
+    alive = FixedCountStragglers(4, 0.5).sample(rng)
+    assert (~alive).sum() == 2
+
+
+def test_adversarial_budget_exceeding_survivors_after_shrink():
+    """Elastic shrink keeps the straggler fraction p; the rebuilt
+    adversarial model's budget floor(p*m') must stay within m' and the
+    runtime's decode must stay finite with w = 0 on the attacked set."""
+    cfg = CodingConfig(scheme="expander", replication=2,
+                       straggler_model="adversarial",
+                       straggler_p=0.9, seed=1)
+    rt0 = coded_train.CodingRuntime(cfg, 6)
+    rt1 = coded_train.elastic_reassign(rt0, [4], generation=1)
+    assert rt1.m == 5
+    mask = rt1.model.sample(np.random.default_rng(0))
+    assert mask.shape == (5,)
+    w, alive = rt1.weights_for(mask), mask
+    assert np.isfinite(w).all()
+    assert (w[~alive] == 0).all()
+    assert np.isfinite(rt1.scale) and rt1.scale > 0
+
+
+def test_dead_machine_stream_keeps_weights_zero_and_finite():
+    """A permanently dead machine (always straggling in the replayed
+    stream) must never receive weight, and the debias stays finite."""
+    cfg = CodingConfig(scheme="expander", replication=2, seed=2)
+    masks = np.ones((6, 4), dtype=bool)
+    masks[:, 3] = False                 # machine 3 dead all run
+    rt = coded_train.CodingRuntime(
+        cfg, 4, mask_source=sw.ReplayedMaskSource(masks))
+    for _ in range(6):
+        w, alive = rt.step_weights()
+        assert w[3] == 0.0
+        assert np.isfinite(w).all()
+    assert np.isfinite(rt.scale)

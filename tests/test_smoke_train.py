@@ -22,17 +22,24 @@ import numpy as np
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_driver(*extra):
+def _driver_proc(*extra, env_extra=None, check=True):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.update(env_extra or {})
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.train",
          "--arch", "qwen1.5-4b", "--steps", "12", "--seq-len", "32",
          "--block-size", "2", "--straggler-p", "0.2", *extra],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=420)
-    assert proc.returncode == 0, proc.stdout + proc.stderr
+    if check:
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+    return proc
+
+
+def _run_driver(*extra, env_extra=None):
+    proc = _driver_proc(*extra, env_extra=env_extra)
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
@@ -117,6 +124,82 @@ def test_stream_chunk_requires_manual_collective():
         cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
     assert proc.returncode != 0
     assert "--collective manual" in proc.stderr
+
+
+def test_train_driver_chaos_kill_reassigns_and_converges(tmp_path):
+    """The CI chaos smoke: kill one of the 4 coded machines at step 3
+    of a 12-step run. The heartbeat monitor must declare it dead after
+    --dead-after consecutive misses, the driver must elastically
+    re-assign over the 3 survivors, and the final loss must land
+    within tolerance of the clean (no-failure) run -- straggler
+    sampling off on both sides so chaos is the only difference."""
+    log = str(tmp_path / "events.json")
+    clean = _run_driver("--straggler-p", "0", "--log-every", "4")
+    summary = _run_driver("--straggler-p", "0", "--log-every", "4",
+                          "--chaos", "kill:1@3", "--event-log", log)
+    chaos = summary["chaos"]
+    assert chaos["dead_machines"] == [1]
+    assert chaos["steps_to_detect"] == {"1": 3}
+    assert chaos["m_final"] == 3 and chaos["generations"] == 2
+    assert len(chaos["reassignments"]) == 1
+    re = chaos["reassignments"][0]
+    assert re["dead"] == [1] and re["survivors"] == [0, 2, 3]
+    kinds = [e["kind"] for e in chaos["events"]]
+    assert kinds == ["straggle", "dead", "reassign"]
+    # Pre-kill steps see identical inputs (same seed, no stragglers):
+    # the streams must match bitwise until the first missed heartbeat.
+    assert summary["losses"][:3] == clean["losses"][:3]
+    # Post-reassignment convergence: same noise floor as the clean run.
+    assert np.isfinite(summary["last_loss"])
+    assert abs(summary["last_loss"] - clean["last_loss"]) < 0.6, (
+        f"chaos run ended at {summary['last_loss']:.3f}, clean at "
+        f"{clean['last_loss']:.3f}")
+    # The structured event log is a JSON artifact mirroring the
+    # summary's chaos object.
+    with open(log) as f:
+        assert json.load(f) == chaos
+
+
+def test_train_driver_chaos_transient_delay_no_reassign():
+    """A bounded delay window straggles a machine (misses, backoff,
+    recovery) without ever declaring it dead: no re-assignment, all
+    machines alive at the end."""
+    summary = _run_driver("--straggler-p", "0", "--log-every", "4",
+                          "--chaos", "delay:2@4-6:10")
+    chaos = summary["chaos"]
+    assert chaos["dead_machines"] == []
+    assert chaos["reassignments"] == []
+    assert chaos["m_final"] == 4 and chaos["generations"] == 1
+    kinds = {e["kind"] for e in chaos["events"]}
+    assert "dead" not in kinds
+    assert np.isfinite(summary["last_loss"])
+
+
+def test_batch_thread_failure_kills_driver_with_traceback():
+    """Pipeline-hardening regression: an exception on the batch-builder
+    worker thread (injected at a double-buffered step) must propagate
+    to the main loop and exit the driver with the original error, not
+    hang or train on with stale data."""
+    proc = _driver_proc("--steps", "6", "--log-every", "2",
+                        env_extra={"REPRO_FAIL_BATCH_AT": "3"},
+                        check=False)
+    assert proc.returncode != 0
+    assert "injected batch failure at step 3" in proc.stderr
+    assert "RuntimeError" in proc.stderr
+
+
+def test_chaos_flag_cross_checks():
+    proc = _driver_proc("--chaos", "kill:1@3", "--ckpt-dir", "/tmp/x",
+                        check=False)
+    assert proc.returncode != 0
+    assert "--ckpt-dir" in proc.stderr
+    proc = _driver_proc("--event-log", "/tmp/x.json", check=False)
+    assert proc.returncode != 0
+    assert "--chaos" in proc.stderr
+    proc = _driver_proc("--chaos", "kill:1@3", "--no-dedup",
+                        check=False)
+    assert proc.returncode != 0
+    assert "dedup" in proc.stderr
 
 
 def test_train_driver_smoke_compressed_int8():
