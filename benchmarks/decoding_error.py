@@ -25,10 +25,14 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (adjacency_assignment, decode, expander_assignment,
-                        monte_carlo_error, random_regular_graph, spectral,
+from repro.core import (AdaptivePolicy, StaticPolicy,
+                        adjacency_assignment, decode, expander_assignment,
+                        monte_carlo_error, policy_regret_report,
+                        random_regular_graph, scheme_zoo_entries, spectral,
                         sweep_campaign, sweep_error, theory)
 from repro.core.compress import compression_campaign
+from repro.core.step_weights import (make_straggler_model,
+                                     sample_mask_stream)
 
 P_GRID = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3)
 
@@ -300,6 +304,67 @@ def sweep_report() -> Dict:
                     f"{key} error {errs[key]:.3e} at p={p} should "
                     f"exceed the uncompressed error {none_e:.3e}")
 
+    # Scheme zoo: the cross-paper comparison grid (expander + FRC +
+    # cyclic-MDS + BIBD + random-d-regular at the shared m = q(q+1) =
+    # 12) through ONE sweep_campaign draw, each scheme's rows checked
+    # bit-for-bit against its own per-point monte_carlo_error oracle.
+    # Acceptance enforced inline (CI runs this via benchmarks.run).
+    zoo_entries = scheme_zoo_entries(3, seed=0)
+    zoo_trials = 256
+    t0 = time.perf_counter()
+    zoo_camp = sweep_campaign(zoo_entries, P_GRID, trials=zoo_trials,
+                              seed=0, cov=False)
+    zoo_camp_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    zoo_rows = {}
+    for e in zoo_entries:
+        label = e.resolved_label()
+        for i, p in enumerate(P_GRID):
+            oracle = monte_carlo_error(e.assignment, p,
+                                       trials=zoo_trials, seed=0,
+                                       method=e.method, cov=False)
+            row = zoo_camp[label][i]
+            if row["mean_error"] != oracle["mean_error"] or \
+                    row["std_error"] != oracle["std_error"]:
+                raise AssertionError(
+                    f"scheme-zoo campaign diverged from per-point "
+                    f"monte_carlo_error at {label} p={p}: {row} vs "
+                    f"{oracle}")
+        zoo_rows[label] = [
+            {"p": r["p"], "mean_error": r["mean_error"]}
+            for r in zoo_camp[label]]
+    zoo_oracle_s = time.perf_counter() - t0
+
+    # Adaptive regret: replay one seeded markov mask stream (the
+    # stagnant-straggler process of Section VIII) under the adaptive
+    # policy vs a grid of static fixed-decoding policies, scored
+    # against the omniscient always-optimal baseline. Acceptance
+    # (enforced inline): the adaptive policy's post-burn-in regret
+    # beats the BEST static fixed policy's.
+    A_z = zoo_entries[0].assignment  # expander, m=12
+    true_p, persistence, steps, burn_in = 0.15, 8.0, 400, 50
+    markov = make_straggler_model(A_z, "markov", true_p,
+                                  persistence=persistence)
+    _, stream = sample_mask_stream(
+        A_z, markov, steps=steps, shuffle=False,
+        rng=np.random.default_rng(42))
+    fixed_grid = (0.05, 0.1, 0.15, 0.2, 0.3)
+    policies = {"adaptive": AdaptivePolicy()}
+    for p_f in fixed_grid:
+        policies[f"static_fixed(p={p_f})"] = StaticPolicy(
+            method="fixed", p=p_f)
+    t0 = time.perf_counter()
+    regret = policy_regret_report(A_z, stream, policies,
+                                  burn_in=burn_in)
+    regret_s = time.perf_counter() - t0
+    best_fixed = min(v["regret"] for k, v in regret.items()
+                     if k.startswith("static_fixed"))
+    if regret["adaptive"]["regret"] >= best_fixed:
+        raise AssertionError(
+            f"adaptive regret {regret['adaptive']['regret']:.3e} does "
+            f"not beat the best static fixed policy ({best_fixed:.3e}) "
+            f"on the seeded markov stream")
+
     return {
         "regime2_grid": {
             "m": m, "d": d, "n": n, "graph": "LPS X^{5,13}",
@@ -337,6 +402,24 @@ def sweep_report() -> Dict:
             "p_grid": list(P_GRID), "trials": comp_trials,
             "dim": comp_dim, "seconds": comp_s,
             "rows": comp_rows,
+        },
+        "scheme_zoo": {
+            "q": 3, "m": 12, "d": 4,
+            "schemes": [e.resolved_label() for e in zoo_entries],
+            "p_grid": list(P_GRID), "trials": zoo_trials,
+            "campaign_seconds": zoo_camp_s,
+            "per_point_oracle_seconds": zoo_oracle_s,
+            "bit_identical_to_oracle": True,  # enforced above
+            "rows": zoo_rows,
+        },
+        "adaptive_regret": {
+            "scheme": A_z.name, "m": A_z.m,
+            "straggler_model": "markov", "true_p": true_p,
+            "persistence": persistence, "steps": steps,
+            "burn_in": burn_in, "seconds": regret_s,
+            "policies": regret,
+            "best_static_fixed_regret": best_fixed,
+            "adaptive_beats_best_static_fixed": True,  # enforced above
         },
         "note": ("per_point = historical monte_carlo_error loop (dense "
                  "covariance SVD per p); sweep = sweep_error (shared "

@@ -17,7 +17,12 @@ TTFT p50/p99 with inline acceptance), and, whenever
   ``sweep_error`` loop -- each with bit-identity / 1e-6-cov / speedup
   acceptance checks inline -- plus spectral-norm timings (dense
   covariance SVD vs matrix-free Lanczos, per-slice vs blocked lockstep
-  Lanczos, dense vs Lanczos graph lambda_2, FFT circulant spectrum).
+  Lanczos, dense vs Lanczos graph lambda_2, FFT circulant spectrum),
+  the scheme-zoo campaign (expander/FRC/cyclic-MDS/BIBD/random-
+  d-regular at the shared m=12, each scheme bit-identical to its
+  per-point ``monte_carlo_error`` oracle) and the adaptive-regret row
+  (the ``core.adaptive`` policy vs the best static fixed-decoding
+  policy on a seeded markov stream; adaptive must win).
 
 Both keep the perf trajectory trackable across PRs.
 """
@@ -158,6 +163,18 @@ def main() -> None:
     print(f"compression grid: {len(cg['rows'])} "
           f"error-vs-p-vs-bits rows in {cg['seconds']:.2f}s "
           f"(codecs x p x decoding incl. majority-vote signSGD)")
+    zoo = sweep["scheme_zoo"]
+    print(f"scheme zoo (m={zoo['m']}, d={zoo['d']}): "
+          f"{len(zoo['schemes'])} schemes x {len(zoo['p_grid'])} "
+          f"p-points in {zoo['campaign_seconds']:.2f}s campaign "
+          f"(oracle loop {zoo['per_point_oracle_seconds']:.2f}s), "
+          f"bit_identical={zoo['bit_identical_to_oracle']}")
+    ar = sweep["adaptive_regret"]
+    print(f"adaptive regret (markov p={ar['true_p']}, "
+          f"{ar['steps']} steps): adaptive "
+          f"{ar['policies']['adaptive']['regret']:.3e} vs best static "
+          f"fixed {ar['best_static_fixed_regret']:.3e} "
+          f"(beats={ar['adaptive_beats_best_static_fixed']})")
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 
 

@@ -113,7 +113,8 @@ ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
 class CodingConfig:
     """Gradient-coding runtime configuration (the paper's technique)."""
 
-    scheme: str = "expander"      # expander | frc | uncoded | adjacency
+    # expander | frc | uncoded | cyclic_mds | bibd | random_regular
+    scheme: str = "expander"
     replication: int = 4          # d
     decoding: str = "optimal"     # optimal | fixed
     straggler_model: str = "bernoulli"  # bernoulli | markov | adversarial

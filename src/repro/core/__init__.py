@@ -12,6 +12,9 @@ Public surface of the paper's core contribution:
 - spectral:    matrix-free spectra (Lanczos covariance norm, FFT
                circulant eigenvalues, sparse-matvec graph lambda_2)
 - stragglers:  Bernoulli / fixed-count / Markov / adversarial attacks
+- adaptive:    online p-hat / transition estimation from the observed
+               mask stream + per-step decoding policies (the regret
+               harness behind the BENCH_sweep.json adaptive row)
 - step_weights: the shared straggler-sample -> decode -> debiased
                step-weights pipeline (single-host GCOD and the
                repro.dist mesh runtime both sit on it)
@@ -25,10 +28,13 @@ Public surface of the paper's core contribution:
 
 from .graphs import (Graph, cycle_graph, complete_graph, hypercube_graph,
                      paley_graph, circulant_graph, random_regular_graph,
-                     lps_graph, make_expander)
+                     random_matching_regular_graph, lps_graph,
+                     make_expander)
 from .assignment import (Assignment, graph_assignment, expander_assignment,
                          frc_assignment, adjacency_assignment,
-                         bernoulli_assignment, uncoded_assignment)
+                         bernoulli_assignment, uncoded_assignment,
+                         cyclic_mds_assignment, bibd_assignment,
+                         random_matching_assignment)
 from .decoding import (DecodeResult, decode, optimal_alpha_graph,
                        optimal_decode_graph, optimal_decode_pinv,
                        optimal_decode_frc, fixed_decode, normalized_error,
@@ -39,7 +45,7 @@ from .batched_decoding import (batched_alpha, batched_fixed_alpha,
                                counts_are_exact, fixed_alpha_grid,
                                frc_alpha_grid)
 from .sweep import (CampaignEntry, bernoulli_uniforms, decode_grid,
-                    sweep_campaign, sweep_error)
+                    scheme_zoo_entries, sweep_campaign, sweep_error)
 from . import spectral
 from .spectral import (circulant_spectrum, covariance_spectral_norm,
                        covariance_spectral_norm_batch, covariance_topk,
@@ -49,7 +55,13 @@ from .stragglers import (StragglerModel, BernoulliStragglers,
                          FixedCountStragglers, MarkovStragglers,
                          AdversarialStragglers,
                          adversarial_mask, adversarial_mask_graph,
-                         adversarial_mask_frc)
+                         adversarial_mask_frc, adversarial_mask_cyclic,
+                         adversarial_mask_bibd)
+from . import adaptive
+from .adaptive import (OnlineStragglerEstimator, StragglerEstimate,
+                       PolicyDecision, DecodingPolicy, StaticPolicy,
+                       AdaptivePolicy, make_policy, replay_policy,
+                       policy_regret_report)
 from .step_weights import (make_straggler_model, sample_mask_stream,
                            batched_step_weights, debias_scale_mc)
 from . import step_weights  # the module: step_weights.step_weights etc.
@@ -62,11 +74,12 @@ from .coded_gd import (LeastSquares, GDTrace, gcod, precompute_alphas,
 
 __all__ = [
     "Graph", "cycle_graph", "complete_graph", "hypercube_graph",
-    "paley_graph", "circulant_graph", "random_regular_graph", "lps_graph",
-    "make_expander",
+    "paley_graph", "circulant_graph", "random_regular_graph",
+    "random_matching_regular_graph", "lps_graph", "make_expander",
     "Assignment", "graph_assignment", "expander_assignment",
     "frc_assignment", "adjacency_assignment", "bernoulli_assignment",
-    "uncoded_assignment",
+    "uncoded_assignment", "cyclic_mds_assignment", "bibd_assignment",
+    "random_matching_assignment",
     "DecodeResult", "decode", "optimal_alpha_graph", "optimal_decode_graph",
     "optimal_decode_pinv", "optimal_decode_frc", "fixed_decode",
     "normalized_error", "monte_carlo_error", "debias_alpha",
@@ -74,13 +87,17 @@ __all__ = [
     "batched_optimal_alpha_graph", "counts_are_exact",
     "fixed_alpha_grid", "frc_alpha_grid",
     "CampaignEntry", "bernoulli_uniforms", "decode_grid",
-    "sweep_campaign", "sweep_error",
+    "scheme_zoo_entries", "sweep_campaign", "sweep_error",
     "spectral", "circulant_spectrum", "covariance_spectral_norm",
     "covariance_spectral_norm_batch", "covariance_topk",
     "graph_lambda2", "lanczos_lambda_max", "lanczos_lambda_max_batch",
     "StragglerModel", "BernoulliStragglers", "FixedCountStragglers",
     "MarkovStragglers", "AdversarialStragglers", "adversarial_mask",
     "adversarial_mask_graph", "adversarial_mask_frc",
+    "adversarial_mask_cyclic", "adversarial_mask_bibd",
+    "adaptive", "OnlineStragglerEstimator", "StragglerEstimate",
+    "PolicyDecision", "DecodingPolicy", "StaticPolicy", "AdaptivePolicy",
+    "make_policy", "replay_policy", "policy_regret_report",
     "step_weights", "make_straggler_model", "sample_mask_stream",
     "batched_step_weights", "debias_scale_mc",
     "compress", "Codec", "get_codec", "compression_campaign",

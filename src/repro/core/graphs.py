@@ -202,6 +202,54 @@ def random_regular_graph(n: int, d: int, seed: int = 0,
                        f"graph on {n} vertices in {max_tries} tries")
 
 
+def random_matching_regular_graph(n: int, d: int, seed: int = 0,
+                                  max_tries: int = 200) -> Graph:
+    """Random d-regular graph as a union of d random perfect matchings.
+
+    The sparse-random-graph construction of Charles et al. (1711.06771):
+    each of the d rounds draws a uniform perfect matching on the n
+    vertices (n even), and the union is d-regular by construction. The
+    matching model is contiguous with the pairing model
+    (``random_regular_graph``) but keeps per-round regularity exact --
+    the generation style of expander-per-round schemes -- and is
+    near-Ramanujan whp like the pairing model. Matchings that collide
+    with an already-placed edge are redrawn so the union stays simple;
+    a final connectivity check rejects the rare disconnected draw.
+    """
+    if n % 2 != 0:
+        raise ValueError(
+            f"random perfect matchings need an even vertex count, got "
+            f"n={n} (a perfect matching pairs all vertices)")
+    if not 1 <= d < n:
+        raise ValueError(f"need 1 <= d < n for a simple d-regular "
+                         f"graph, got d={d}, n={n}")
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        seen: set = set()
+        edges: List[Edge] = []
+        ok = True
+        for _round in range(d):
+            for _try in range(max_tries):
+                perm = rng.permutation(n)
+                matching = [(int(min(a, b)), int(max(a, b)))
+                            for a, b in perm.reshape(-1, 2)]
+                if all(e not in seen for e in matching):
+                    seen.update(matching)
+                    edges.extend(matching)
+                    break
+            else:
+                ok = False
+                break
+        if ok:
+            g = Graph(n, tuple(edges))
+            if g.is_connected():
+                assert g.is_regular()
+                return g
+    raise RuntimeError(f"failed to build a connected {d}-regular union "
+                       f"of perfect matchings on {n} vertices in "
+                       f"{max_tries} tries")
+
+
 def circulant_graph(n: int, offsets: Sequence[int]) -> Graph:
     """Cayley graph of Z_n with connection set {±o : o in offsets}.
 

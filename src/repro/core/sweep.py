@@ -40,6 +40,36 @@ warm-started per scheme, and every (scheme, p) covariance norm from
 one blocked lockstep Lanczos. Per-(scheme, p) rows stay bit-identical
 to per-scheme ``sweep_error`` (the oracle this engine is
 differential-tested against in tests/test_campaign.py).
+
+Scheme zoo
+----------
+``scheme_zoo_entries(q)`` packages the cross-paper comparison grid:
+every rival construction cited in PAPERS.md, instantiated at the ONE
+machine count m = q(q+1) they all share (q an affine-plane order), so
+the whole zoo faces the same ``bernoulli_uniforms(m, trials, seed)``
+draw. At the default q=3 (m=12, d=q+1=4) the ``CampaignEntry`` table
+is:
+
+=====================  =======================================  ===  ==========
+label                  construction                             n    decode
+=====================  =======================================  ===  ==========
+expander:optimal       paper's d-regular vertex-transitive      6    O(m) graph
+                       expander (Def II.1)
+frc:fixed              fractional repetition code (Table I)     3    counts GEMM
+cyclic_mds:optimal     circulant shifted code (Raviv et al.,    12   pinv Eq. 9
+                       1707.03858)
+bibd_affine:optimal    affine-plane AG(2,q) block design        9    pinv Eq. 9
+                       (Kadhe et al., 1904.13373); load q,
+                       replication q+1
+random_regular:        union of d random perfect matchings      6    O(m) graph
+optimal                (Charles et al., 1711.06771)
+=====================  =======================================  ===  ==========
+
+Each entry's campaign rows are pinned bit-for-bit against its own
+per-point oracle -- ``sweep_error`` and scalar ``monte_carlo_error``
+-- in tests/test_scheme_zoo.py, and the cyclic/BIBD adversarial worst
+cases against C(m, pm) brute force in
+tests/test_adversarial_oracle.py.
 """
 
 from __future__ import annotations
@@ -50,7 +80,9 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..kernels.batched_alpha import ops as _ba_ops
-from .assignment import Assignment
+from .assignment import (Assignment, bibd_assignment,
+                         cyclic_mds_assignment, expander_assignment,
+                         frc_assignment, random_matching_assignment)
 from .batched_decoding import (batched_alpha, fixed_alpha_grid,
                                frc_alpha_grid, is_graph_scheme)
 from .spectral import (covariance_spectral_norm,
@@ -187,6 +219,35 @@ class CampaignEntry:
 
     def resolved_label(self) -> str:
         return self.label or f"{self.assignment.name}:{self.method}"
+
+
+def scheme_zoo_entries(q: int = 3, *, seed: int = 0
+                       ) -> List[CampaignEntry]:
+    """The cross-paper comparison zoo at one shared machine count.
+
+    m = q(q+1) is the unique count all five constructions share (see
+    the module docstring's table): the affine plane of order q has
+    exactly q^2 + q lines/machines, and d = q+1 then divides m (FRC),
+    divides 2m (expander / random matchings), and is a valid circulant
+    shift width -- so ``sweep_campaign(scheme_zoo_entries(q), ...)``
+    evaluates every scheme against the SAME shared uniform draw, the
+    protocol behind the paper's Figure-3/Table-I comparisons. q must
+    be a prime affine-plane order (q=3 -> m=12 by default).
+    """
+    d, m = q + 1, q * (q + 1)
+    return [
+        CampaignEntry(expander_assignment(m, d, vertex_transitive=True,
+                                          seed=seed),
+                      method="optimal", label="expander:optimal"),
+        CampaignEntry(frc_assignment(m, d), method="fixed",
+                      label="frc:fixed"),
+        CampaignEntry(cyclic_mds_assignment(m, d), method="optimal",
+                      label="cyclic_mds:optimal"),
+        CampaignEntry(bibd_assignment(q * q, q, design="affine"),
+                      method="optimal", label="bibd_affine:optimal"),
+        CampaignEntry(random_matching_assignment(m, d, seed=seed),
+                      method="optimal", label="random_regular:optimal"),
+    ]
 
 
 EntryLike = Union[CampaignEntry, Assignment,

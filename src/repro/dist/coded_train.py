@@ -142,8 +142,13 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import CodingConfig, ModelConfig
 import repro.core.compress as compress_mod
 import repro.core.step_weights as sw
-from repro.core.assignment import (Assignment, expander_assignment,
-                                   frc_assignment, uncoded_assignment)
+from repro.core.adaptive import (DecodingPolicy, OnlineStragglerEstimator,
+                                 PolicyDecision, make_policy)
+from repro.core.assignment import (Assignment, bibd_assignment,
+                                   cyclic_mds_assignment,
+                                   expander_assignment, frc_assignment,
+                                   random_matching_assignment,
+                                   uncoded_assignment)
 from repro.kernels.coded_combine import ops as cc_ops
 from repro.models import model as M
 from repro.optim import optimizers as opt_mod
@@ -767,8 +772,23 @@ def make_assignment(coding: CodingConfig, m: int) -> Assignment:
         return frc_assignment(m, coding.replication)
     if coding.scheme == "uncoded":
         return uncoded_assignment(m)
+    if coding.scheme == "cyclic_mds":
+        return cyclic_mds_assignment(m, coding.replication)
+    if coding.scheme == "bibd":
+        # Solve for the design whose *machine* count is m. With
+        # replication r = coding.replication: the affine plane of
+        # order q = r - 1 has q^2 + q = (r-1)r machines, else a
+        # symmetric design puts one machine per point (v = m, k = r).
+        r = coding.replication
+        if m == (r - 1) * r:
+            return bibd_assignment((r - 1) ** 2, r - 1, design="affine")
+        return bibd_assignment(m, r, design="symmetric")
+    if coding.scheme == "random_regular":
+        return random_matching_assignment(m, coding.replication,
+                                          seed=coding.seed)
     raise ValueError(f"unknown scheme {coding.scheme!r} "
-                     "(expander | frc | uncoded)")
+                     "(expander | frc | uncoded | cyclic_mds | bibd "
+                     "| random_regular)")
 
 
 def elastic_seed(seed: int, generation: int) -> int:
@@ -844,7 +864,8 @@ def elastic_reassign(runtime: "CodingRuntime", dead, *,
     return CodingRuntime(coding, m_new, debias=runtime.debias,
                          debias_trials=runtime.debias_trials,
                          cache_size=runtime.cache_size,
-                         mask_source=mask_source)
+                         mask_source=mask_source,
+                         adaptive=runtime.adaptive)
 
 
 @dataclasses.dataclass
@@ -874,6 +895,12 @@ class CodingRuntime:
     debias_trials: int = 256
     cache_size: int = 4096
     mask_source: Optional[sw.MaskSource] = None
+    # Per-step decoding policy (core.adaptive): None keeps the
+    # pre-adaptive fixed-ahead-of-time behaviour bit-identically; a
+    # policy spec ("adaptive" | "always_optimal" | "always_fixed" | a
+    # DecodingPolicy) makes every round decide its decoder from the
+    # online straggler estimate before the round's mask is observed.
+    adaptive: Optional[object] = None
 
     def __post_init__(self):
         self.assignment = make_assignment(self.coding, self.m)
@@ -891,8 +918,28 @@ class CodingRuntime:
             raise ValueError(
                 f"mask source is over m={self.mask_source.m} machines, "
                 f"runtime has m={self.m}")
+        self.policy: Optional[DecodingPolicy] = None
+        self.estimator: Optional[OnlineStragglerEstimator] = None
+        self.last_decision: Optional[PolicyDecision] = None
+        self.decision_counts: Dict[str, int] = {}
+        if self.adaptive is not None:
+            self.policy = make_policy(self.adaptive,
+                                      p=self.coding.straggler_p)
+            # The configured p seeds the estimator's prior; the
+            # observed stream takes over within a few rounds.
+            self.estimator = OnlineStragglerEstimator(
+                self.m, prior_p=min(max(self.coding.straggler_p, 0.0),
+                                    0.99))
         self.scale = 1.0
-        if self.debias and self.coding.decoding == "optimal":
+        # An adaptive runtime may decode optimally on any step
+        # whatever the configured default, so it needs the optimal-
+        # decode debias scale too; the scale applies only to optimal
+        # decodes (Section VIII fixed weights are unbiased by
+        # construction), and its value is a pure function of
+        # (assignment, p, seed) -- identical to the non-adaptive
+        # runtime's, which keeps always_optimal bit-identical.
+        if self.debias and (self.coding.decoding == "optimal"
+                            or self.policy is not None):
             if self.coding.straggler_model == "adversarial":
                 # The attack mask is deterministic: the exact debias
                 # factor is sqrt(n)/|alpha| of that one decode.
@@ -930,23 +977,33 @@ class CodingRuntime:
         self.mask_source.skip(rounds)
         self.steps_sampled += rounds
 
-    def weights_for(self, alive: np.ndarray) -> np.ndarray:
+    def weights_for(self, alive: np.ndarray, *,
+                    method: Optional[str] = None,
+                    p: Optional[float] = None) -> np.ndarray:
         """Memoised decode of one given (m,) alive mask -> w float32.
 
         The mask-agnostic half of ``step_weights``: the observed-mask
         path (heartbeat-derived masks pushed by the driver) and the
         sampled path share this cache, so stagnant failures hit the
-        memo whether they were sampled or real."""
+        memo whether they were sampled or real. ``method``/``p``
+        default to the configured decoding; an adaptive policy passes
+        its per-step decision, and the memo key carries (method, p) so
+        decisions with different decoders never alias (the debias
+        scale applies only to optimal decodes)."""
         alive = np.asarray(alive, dtype=bool)
         if alive.shape != (self.m,):
             raise ValueError(f"mask must be ({self.m},), "
                              f"got {alive.shape}")
-        key = alive.tobytes()
+        if method is None:
+            method = self.coding.decoding
+        if p is None:
+            p = self.coding.straggler_p
+        key = (method, float(p), alive.tobytes())
         w = self._cache.get(key)
         if w is None:
+            scale = self.scale if method == "optimal" else 1.0
             w, _ = sw.step_weights(
-                self.assignment, alive, method=self.coding.decoding,
-                p=self.coding.straggler_p, scale=self.scale)
+                self.assignment, alive, method=method, p=p, scale=scale)
             w = w.astype(np.float32)
             if len(self._cache) >= self.cache_size:
                 # FIFO eviction: i.i.d. models at large m never repeat
@@ -956,12 +1013,36 @@ class CodingRuntime:
             self.decode_calls += 1
         return w
 
+    def _decide(self) -> PolicyDecision:
+        """One adaptive decision from the estimator's past-only state
+        (the protocol of ``core.adaptive.replay_policy``: decide, use,
+        then observe)."""
+        decision = self.policy.decide(self.estimator.estimate())
+        self.last_decision = decision
+        self.decision_counts[decision.method] = \
+            self.decision_counts.get(decision.method, 0) + 1
+        return decision
+
     def step_weights(self) -> Tuple[np.ndarray, np.ndarray]:
         """One round from the mask source: returns (w (m,) float32,
         alive (m,) bool)."""
         alive = self.mask_source.next_mask()
         self.steps_sampled += 1
+        if self.policy is not None:
+            decision = self._decide()
+            w = self.weights_for(alive, method=decision.method,
+                                 p=decision.p)
+            self.estimator.observe(alive)
+            return w, alive
         return self.weights_for(alive), alive
+
+    def suggested_lookahead(self) -> int:
+        """The policy's current prefetch-horizon suggestion (>= 1);
+        1 when no policy is configured. Peeks at the estimate without
+        consuming a round."""
+        if self.policy is None:
+            return 1
+        return self.policy.decide(self.estimator.estimate()).lookahead
 
     def decode_batch(self, masks) -> Tuple[np.ndarray, np.ndarray]:
         """Batched (T, m) masks -> (W, alphas) through the shared
@@ -986,13 +1067,29 @@ class CodingRuntime:
         tests/test_coding_runtime.py). The chunk is deduplicated
         against the memo cache first -- under stagnant processes the
         whole horizon is usually a single novel decode (or none).
+
+        With an adaptive policy the rounds inside the chunk decide
+        sequentially (decide from the past, decode, observe) through
+        the same memoised scalar path as ``step_weights`` -- each
+        round's decision may pick a different decoder, so there is no
+        single-method batch to dispatch; bit-identity with the
+        per-step loop is by construction.
         """
         if horizon < 1:
             raise ValueError("horizon must be >= 1")
         alive = np.stack(
             [self.mask_source.next_mask() for _ in range(horizon)])
         self.steps_sampled += horizon
-        keys = [a.tobytes() for a in alive]
+        if self.policy is not None:
+            rows = []
+            for a in alive:
+                decision = self._decide()
+                rows.append(self.weights_for(a, method=decision.method,
+                                             p=decision.p))
+                self.estimator.observe(a)
+            return np.stack(rows), alive
+        keys = [(self.coding.decoding, float(self.coding.straggler_p),
+                 a.tobytes()) for a in alive]
         # Gather this horizon's rows locally: FIFO eviction while
         # inserting novel decodes must not drop an entry the horizon
         # itself still references.

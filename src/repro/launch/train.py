@@ -84,9 +84,19 @@ def main(argv=None) -> dict:
     ap.add_argument("--arch", default="qwen1.5-4b")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--scheme", default="expander",
-                    choices=("expander", "frc", "uncoded"))
+                    choices=("expander", "frc", "uncoded", "cyclic_mds",
+                             "bibd", "random_regular"))
     ap.add_argument("--decoding", default="optimal",
                     choices=("optimal", "fixed"))
+    ap.add_argument("--adaptive", default="none",
+                    choices=("none", "adaptive", "always_optimal",
+                             "always_fixed"),
+                    help="per-step decoding policy (core.adaptive): "
+                         "estimate p-hat online from the observed mask "
+                         "stream and switch optimal-vs-fixed decoding "
+                         "per step ('adaptive'); the always_* anchors "
+                         "pin the static behaviours ('none': the "
+                         "configured --decoding, no estimator)")
     ap.add_argument("--straggler-model", default="bernoulli",
                     choices=("bernoulli", "markov", "adversarial"))
     ap.add_argument("--straggler-p", type=float, default=0.2)
@@ -210,6 +220,7 @@ def main(argv=None) -> dict:
     # observed: masks are pushed per step from the heartbeat monitor
     # instead of drawn from the straggler model.
     injector = monitor = surv = None
+    adaptive = None if args.adaptive == "none" else args.adaptive
     if args.chaos:
         schedule = chaos_mod.parse_chaos_spec(args.chaos, m_workers)
         injector = chaos_mod.ChaosInjector(schedule, m_workers,
@@ -220,9 +231,11 @@ def main(argv=None) -> dict:
         surv = failures.SurvivorMap(m_workers)
         runtime = coded_train.CodingRuntime(
             coding, m_workers,
-            mask_source=sw.ObservedMaskSource(m_workers))
+            mask_source=sw.ObservedMaskSource(m_workers),
+            adaptive=adaptive)
     else:
-        runtime = coded_train.CodingRuntime(coding, m_workers)
+        runtime = coded_train.CodingRuntime(coding, m_workers,
+                                            adaptive=adaptive)
     lookahead = max(1, args.lookahead)
     log_every = args.log_every or max(1, args.steps // 10)
 
@@ -601,6 +614,14 @@ def main(argv=None) -> dict:
                "comm_bytes_per_step_float32": comm_bytes_f32,
                "decode_calls": runtime.decode_calls,
                "chaos": chaos_summary}
+    if runtime.policy is not None:
+        est = runtime.estimator.estimate()
+        summary["adaptive"] = {
+            "policy": args.adaptive,
+            "p_hat": est.p_hat,
+            "persistence_hat": est.persistence_hat,
+            "decision_counts": dict(runtime.decision_counts),
+        }
     print(json.dumps(summary))
     return summary
 

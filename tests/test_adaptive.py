@@ -1,0 +1,225 @@
+"""Adaptive per-step decoding regression suite (PR 10).
+
+Pins the ``core.adaptive`` layer and its ``CodingRuntime`` wiring:
+
+* the online estimator converges on seeded bernoulli AND markov
+  streams (p-hat to the true straggle fraction, persistence-hat to the
+  chain's mean sojourn);
+* the adaptive policy matches the omniscient method choice after
+  burn-in, and its replayed regret beats every static fixed-decoding
+  policy on a seeded markov stream (the BENCH_sweep.json acceptance,
+  at test scale);
+* ``CodingRuntime(adaptive="always_optimal")`` is BIT-IDENTICAL to the
+  existing non-adaptive optimal path -- masks, weights, scale, and
+  decode_calls -- through both ``step_weights`` and
+  ``weights_lookahead`` (the anchor that keeps the adaptive layer a
+  pure extension, not a behaviour change).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import CodingConfig
+from repro.core import (AdaptivePolicy, OnlineStragglerEstimator,
+                        StaticPolicy, expander_assignment, make_policy,
+                        policy_regret_report, replay_policy)
+from repro.core.step_weights import (make_straggler_model,
+                                     sample_mask_stream)
+from repro.dist import coded_train
+
+
+def markov_stream(assignment, p, persistence, steps, seed):
+    model = make_straggler_model(assignment, "markov", p,
+                                 persistence=persistence)
+    _, masks = sample_mask_stream(assignment, model, steps=steps,
+                                  shuffle=False,
+                                  rng=np.random.default_rng(seed))
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# Estimator convergence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [0.05, 0.2, 0.4])
+def test_estimator_converges_on_bernoulli_stream(p):
+    m, steps = 16, 600
+    rng = np.random.default_rng(11)
+    est = OnlineStragglerEstimator(m, prior_p=0.1)
+    for _ in range(steps):
+        est.observe(rng.random(m) >= p)
+    e = est.estimate()
+    # ~9600 machine-rounds: the MC error of p-hat is ~sqrt(p/9600).
+    assert e.p_hat == pytest.approx(p, abs=0.03)
+    assert e.steps == steps
+    # i.i.d. stream: both rows of the transition matrix are the
+    # marginal (straggling tomorrow is independent of today).
+    assert e.transition_hat[0, 1] == pytest.approx(p, abs=0.05)
+    assert e.transition_hat[1, 1] == pytest.approx(p, abs=0.08)
+
+
+def test_estimator_converges_on_markov_stream():
+    A = expander_assignment(16, 4)
+    p, persistence = 0.2, 6.0
+    est = OnlineStragglerEstimator(16, prior_p=0.1)
+    for mask in markov_stream(A, p, persistence, steps=1500, seed=5):
+        est.observe(mask)
+    e = est.estimate()
+    assert e.p_hat == pytest.approx(p, abs=0.05)
+    # Mean straggle sojourn = persistence; the chain's exit rate is
+    # 1/persistence, so transition_hat[1, 0] ~ 1/6.
+    assert e.persistence_hat == pytest.approx(persistence, rel=0.35)
+    assert e.transition_hat[1, 1] > e.transition_hat[0, 1], \
+        "stagnant chain: straggling must predict straggling"
+
+
+def test_estimator_rejects_bad_parameters():
+    with pytest.raises(ValueError):
+        OnlineStragglerEstimator(0)
+    with pytest.raises(ValueError):
+        OnlineStragglerEstimator(4, prior_p=1.0)
+    with pytest.raises(ValueError):
+        OnlineStragglerEstimator(4, prior_weight=0)
+    est = OnlineStragglerEstimator(4)
+    with pytest.raises(ValueError):
+        est.observe(np.ones(5, dtype=bool))
+
+
+# ---------------------------------------------------------------------------
+# Policy decisions
+# ---------------------------------------------------------------------------
+
+
+def test_policy_matches_omniscient_after_burn_in():
+    """Above the switch threshold the omniscient method is 'optimal'
+    (it minimizes the decode error pointwise); the adaptive policy
+    must settle on it once the estimate has converged."""
+    A = expander_assignment(12, 4)
+    masks = markov_stream(A, p=0.2, persistence=8.0, steps=300, seed=42)
+    replay = replay_policy(A, masks, AdaptivePolicy())
+    burn_in = 50
+    assert set(replay["methods"][burn_in:]) == {"optimal"}
+    # ... and therefore matches the omniscient errors pointwise there.
+    omni = replay_policy(A, masks, StaticPolicy(method="optimal"))
+    np.testing.assert_array_equal(replay["errors"][burn_in:],
+                                  omni["errors"][burn_in:])
+    # Lookahead tracks the chain's persistence (clipped to the cap).
+    assert replay["lookaheads"][-1] >= 4
+
+
+def test_policy_picks_fixed_below_threshold():
+    est = OnlineStragglerEstimator(12, prior_p=0.0, prior_weight=1.0)
+    for _ in range(50):
+        est.observe(np.ones(12, dtype=bool))  # nobody ever straggles
+    decision = AdaptivePolicy(threshold=0.05).decide(est.estimate())
+    assert decision.method == "fixed"
+    assert decision.p < 0.05
+
+
+def test_adaptive_regret_beats_static_fixed_policies():
+    """The BENCH_sweep.json acceptance at test scale: on a seeded
+    markov stream the adaptive policy's post-burn-in regret (vs the
+    always-optimal omniscient baseline) beats EVERY static
+    fixed-decoding policy, including fixed at the true p."""
+    A = expander_assignment(12, 4)
+    masks = markov_stream(A, p=0.15, persistence=8.0, steps=300,
+                          seed=42)
+    policies = {"adaptive": AdaptivePolicy()}
+    for p_f in (0.05, 0.15, 0.3):
+        policies[f"fixed(p={p_f})"] = StaticPolicy(method="fixed", p=p_f)
+    report = policy_regret_report(A, masks, policies, burn_in=50)
+    assert report["omniscient"]["regret"] == 0.0
+    for name, row in report.items():
+        assert row["regret"] >= -1e-12, f"{name}: beat the omniscient?"
+    best_fixed = min(v["regret"] for k, v in report.items()
+                     if k.startswith("fixed"))
+    assert report["adaptive"]["regret"] < best_fixed
+
+
+def test_make_policy_specs():
+    assert isinstance(make_policy("adaptive"), AdaptivePolicy)
+    always = make_policy("always_optimal", p=0.3)
+    assert isinstance(always, StaticPolicy)
+    assert always.method == "optimal" and always.p == 0.3
+    assert make_policy("always_fixed").method == "fixed"
+    custom = AdaptivePolicy(threshold=0.2)
+    assert make_policy(custom) is custom
+    with pytest.raises(ValueError, match="policy"):
+        make_policy("sometimes_optimal")
+
+
+# ---------------------------------------------------------------------------
+# CodingRuntime wiring
+# ---------------------------------------------------------------------------
+
+
+def _cfg(**kw):
+    base = dict(scheme="expander", replication=4, decoding="optimal",
+                straggler_model="markov", straggler_p=0.15, seed=3)
+    base.update(kw)
+    return CodingConfig(**base)
+
+
+def test_runtime_always_optimal_bit_identical_per_step():
+    rt_plain = coded_train.CodingRuntime(_cfg(), 12)
+    rt_adapt = coded_train.CodingRuntime(_cfg(), 12,
+                                         adaptive="always_optimal")
+    assert rt_plain.scale == rt_adapt.scale
+    for _ in range(25):
+        w1, a1 = rt_plain.step_weights()
+        w2, a2 = rt_adapt.step_weights()
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(w1, w2)
+    assert rt_plain.decode_calls == rt_adapt.decode_calls
+
+
+def test_runtime_always_optimal_bit_identical_lookahead():
+    rt_plain = coded_train.CodingRuntime(_cfg(), 12)
+    rt_adapt = coded_train.CodingRuntime(_cfg(), 12,
+                                         adaptive="always_optimal")
+    for _ in range(4):
+        W1, A1 = rt_plain.weights_lookahead(5)
+        W2, A2 = rt_adapt.weights_lookahead(5)
+        np.testing.assert_array_equal(A1, A2)
+        np.testing.assert_array_equal(W1, W2)
+    assert rt_plain.decode_calls == rt_adapt.decode_calls
+
+
+def test_runtime_adaptive_estimates_and_counts_decisions():
+    rt = coded_train.CodingRuntime(_cfg(straggler_p=0.25), 12,
+                                   adaptive="adaptive")
+    for _ in range(40):
+        w, alive = rt.step_weights()
+        assert np.all(w[~alive] == 0)
+    assert sum(rt.decision_counts.values()) == 40
+    est = rt.estimator.estimate()
+    assert 0.0 < est.p_hat < 1.0
+    assert rt.suggested_lookahead() >= 1
+    assert rt.last_decision is not None
+    # p=0.25 is far above the switch threshold: the policy must have
+    # settled on optimal decoding.
+    assert rt.decision_counts["optimal"] > 30
+
+
+def test_runtime_adaptive_cache_keys_separate_methods():
+    """An adaptive runtime may decode the SAME mask under different
+    decisions; the memo must never alias them."""
+    rt = coded_train.CodingRuntime(_cfg(), 12)
+    mask = np.array([True] * 10 + [False] * 2)
+    w_opt = rt.weights_for(mask, method="optimal")
+    w_fix = rt.weights_for(mask, method="fixed", p=0.25)
+    assert rt.decode_calls == 2
+    assert not np.array_equal(w_opt, w_fix)
+    # Second lookups hit the memo.
+    np.testing.assert_array_equal(
+        rt.weights_for(mask, method="fixed", p=0.25), w_fix)
+    assert rt.decode_calls == 2
+
+
+def test_elastic_reassign_carries_adaptive_policy():
+    rt = coded_train.CodingRuntime(_cfg(), 12, adaptive="adaptive")
+    rt2 = coded_train.elastic_reassign(rt, [0, 1], generation=1)
+    assert rt2.policy is not None
+    assert rt2.m == 10
+    assert rt2.estimator.m == 10

@@ -1,0 +1,217 @@
+"""Cross-scheme property suite for the scheme zoo (PR 10).
+
+The zoo's contract, per the differential-testing convention:
+
+* every construction is d-regular / load-balanced (constant per-block
+  replication AND constant per-machine load);
+* decoded weights vanish on dead machines, for every decoder;
+* ``batched_alpha`` == scalar ``decode`` alphas bit-for-bit on the new
+  schemes (they dispatch to the pseudoinverse / graph paths -- the
+  batched engine must not diverge from the scalar oracle);
+* ``sweep_campaign`` over ``scheme_zoo_entries`` == per-point
+  ``monte_carlo_error`` bit-for-bit (the shared-draw protocol);
+* invalid constructions are rejected at construction time with clear
+  errors (the FixedCountStragglers-style edge-case satellite).
+
+Deterministic seeded checks always run; hypothesis fuzzes the
+parameter space on top (CI guards hypothesis is installed).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (batched_alpha, bibd_assignment,
+                        cyclic_mds_assignment, decode, monte_carlo_error,
+                        random_matching_assignment,
+                        random_matching_regular_graph, scheme_zoo_entries,
+                        sweep_campaign)
+from repro.core.step_weights import batched_step_weights, step_weights
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYP = True
+except ImportError:  # pragma: no cover - CI fails loudly via the guard
+    HAS_HYP = False
+
+
+def zoo_assignments():
+    return [
+        cyclic_mds_assignment(12, 4),
+        cyclic_mds_assignment(7, 3),
+        bibd_assignment(7, 3),                    # Fano plane
+        bibd_assignment(13, 4),                   # PG(2, 3)
+        bibd_assignment(9, 3, design="affine"),   # AG(2, 3)
+        random_matching_assignment(12, 4, seed=0),
+        random_matching_assignment(8, 2, seed=1),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Regularity / load balance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("A", zoo_assignments(),
+                         ids=lambda a: a.name)
+def test_zoo_schemes_are_regular_and_load_balanced(A):
+    loads = A.A.sum(axis=0)          # blocks per machine
+    replication = A.A.sum(axis=1)    # machines per block
+    assert len(set(loads.tolist())) == 1, f"{A.name}: unbalanced load"
+    assert len(set(replication.tolist())) == 1, \
+        f"{A.name}: unbalanced replication"
+    assert np.all((A.A == 0) | (A.A == 1))
+
+
+def test_zoo_shared_machine_count():
+    """The whole q=3 zoo shares m=12 -- the precondition for the one-
+    draw campaign protocol."""
+    entries = scheme_zoo_entries(3, seed=0)
+    assert len(entries) == 5
+    assert {e.assignment.m for e in entries} == {12}
+    labels = [e.resolved_label() for e in entries]
+    assert len(set(labels)) == 5
+
+
+# ---------------------------------------------------------------------------
+# Dead machines get zero weight
+# ---------------------------------------------------------------------------
+
+
+def check_dead_weights_zero(A, seed):
+    rng = np.random.default_rng(seed)
+    for trial in range(10):
+        alive = rng.random(A.m) >= 0.35
+        for method in ("optimal", "fixed"):
+            w, _ = step_weights(A, alive, method=method, p=0.35)
+            assert np.all(w[~alive] == 0), \
+                f"{A.name} {method}: dead machine got weight"
+
+
+@pytest.mark.parametrize("A", zoo_assignments(),
+                         ids=lambda a: a.name)
+def test_dead_machine_weights_zero(A):
+    check_dead_weights_zero(A, seed=0)
+
+
+if HAS_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from(range(len(zoo_assignments()))),
+           st.integers(0, 2 ** 16))
+    def test_dead_machine_weights_zero_hyp(idx, seed):
+        check_dead_weights_zero(zoo_assignments()[idx], seed)
+
+
+# ---------------------------------------------------------------------------
+# Batched == scalar decoders
+# ---------------------------------------------------------------------------
+
+
+def check_batched_matches_scalar(A, seed, trials=16):
+    rng = np.random.default_rng(seed)
+    masks = rng.random((trials, A.m)) >= 0.3
+    for method, p in (("optimal", 0.0), ("fixed", 0.3)):
+        batched = batched_alpha(A, masks, method=method, p=p)
+        scalar = np.stack([
+            decode(A, a, method=method, p=p).alpha for a in masks])
+        np.testing.assert_array_equal(
+            batched, scalar,
+            err_msg=f"{A.name} {method}: batched != scalar alphas")
+        W, alphas = batched_step_weights(A, masks, method=method, p=p)
+        scalar_w = np.stack([
+            decode(A, a, method=method, p=p).w for a in masks])
+        np.testing.assert_array_equal(W, scalar_w)
+
+
+@pytest.mark.parametrize("A", zoo_assignments(),
+                         ids=lambda a: a.name)
+def test_batched_matches_scalar(A):
+    check_batched_matches_scalar(A, seed=1)
+
+
+if HAS_HYP:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.sampled_from(range(len(zoo_assignments()))),
+           st.integers(0, 2 ** 16))
+    def test_batched_matches_scalar_hyp(idx, seed):
+        check_batched_matches_scalar(zoo_assignments()[idx], seed,
+                                     trials=8)
+
+
+# ---------------------------------------------------------------------------
+# Campaign == per-point Monte-Carlo, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def check_zoo_campaign_differential(seed, trials, p_grid):
+    entries = scheme_zoo_entries(3, seed=0)
+    camp = sweep_campaign(entries, p_grid, trials=trials, seed=seed,
+                          cov=False)
+    for e in entries:
+        label = e.resolved_label()
+        for i, p in enumerate(p_grid):
+            oracle = monte_carlo_error(e.assignment, p, trials=trials,
+                                       seed=seed, method=e.method,
+                                       cov=False)
+            row = camp[label][i]
+            assert row["mean_error"] == oracle["mean_error"], \
+                f"{label} p={p}: campaign mean != monte_carlo_error"
+            assert row["std_error"] == oracle["std_error"], \
+                f"{label} p={p}: campaign std != monte_carlo_error"
+
+
+def test_zoo_campaign_bit_identical_to_per_point():
+    check_zoo_campaign_differential(seed=7, trials=64,
+                                    p_grid=[0.05, 0.2, 0.4])
+
+
+if HAS_HYP:
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 16),
+           st.lists(st.sampled_from([0.05, 0.1, 0.15, 0.25, 0.35, 0.45]),
+                    min_size=1, max_size=4, unique=True))
+    def test_zoo_campaign_bit_identical_hyp(seed, p_grid):
+        check_zoo_campaign_differential(seed, trials=16, p_grid=p_grid)
+
+
+# ---------------------------------------------------------------------------
+# Rejection paths (construction-time validation)
+# ---------------------------------------------------------------------------
+
+
+def test_cyclic_mds_rejects_bad_parameters():
+    with pytest.raises(ValueError, match="d"):
+        cyclic_mds_assignment(5, 6)     # d > m
+    with pytest.raises(ValueError, match="d"):
+        cyclic_mds_assignment(5, 0)     # d < 1
+
+
+def test_bibd_rejects_bad_parameters():
+    with pytest.raises(ValueError, match="[dD]ivisib|lambda"):
+        bibd_assignment(8, 3)           # k(k-1) does not divide v-1
+    with pytest.raises(ValueError, match="k"):
+        bibd_assignment(4, 1)           # k < 2
+    with pytest.raises(ValueError, match="k"):
+        bibd_assignment(4, 4)           # k >= v
+    with pytest.raises(ValueError, match="affine"):
+        bibd_assignment(7, 3, design="affine")   # v != k^2
+    with pytest.raises(ValueError, match="prime"):
+        bibd_assignment(16, 4, design="affine")  # q=4 not prime
+    with pytest.raises(ValueError, match="design"):
+        bibd_assignment(7, 3, design="mystery")
+
+
+def test_random_matching_rejects_bad_parameters():
+    with pytest.raises(ValueError, match="d"):
+        random_matching_assignment(12, 13)   # d > m
+    with pytest.raises(ValueError, match="d"):
+        random_matching_assignment(12, 0)    # d < 1
+    with pytest.raises(ValueError, match=r"d \| 2m"):
+        random_matching_assignment(9, 4)     # d does not divide 2m
+    with pytest.raises(ValueError, match="even"):
+        random_matching_regular_graph(7, 3)  # odd vertex count
+    with pytest.raises(ValueError, match="d"):
+        random_matching_regular_graph(6, 6)  # d >= n
